@@ -1,0 +1,77 @@
+"""Shared benchmark machinery: run a variant over a stream, measure
+FPR/FNR/load/convergence + wall-clock throughput."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Dedup, DedupConfig
+from repro.data.streams import controlled_distinct_stream
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def run_stream_measured(cfg: DedupConfig, keys: np.ndarray,
+                        truth: np.ndarray, n_windows: int = 20) -> dict:
+    """Process the whole stream; returns rates + windowed curves + throughput."""
+    d = Dedup(cfg)
+    st = d.init()
+    jkeys = jnp.asarray(keys)
+    # one warm-up batch for jit, then timed full run
+    _ = d.process(st, jkeys[:cfg.batch_size])
+    t0 = time.perf_counter()
+    st, dup = d.run_stream(st, jkeys)
+    dup = np.asarray(dup)
+    dt = time.perf_counter() - t0
+    n = len(keys)
+    fp = (dup & ~truth)
+    fn = (~dup & truth)
+    w = max(1, n // n_windows)
+    curves = []
+    for i in range(0, n - w + 1, w):
+        sl = slice(i, i + w)
+        nd = max(1, int((~truth[sl]).sum()))
+        ndup = max(1, int(truth[sl].sum()))
+        curves.append({"pos": i + w,
+                       "fpr": float(fp[sl].sum() / nd),
+                       "fnr": float(fn[sl].sum() / ndup)})
+    return {
+        "fpr": float(fp.sum() / max(1, (~truth).sum())),
+        "fnr": float(fn.sum() / max(1, truth.sum())),
+        "throughput_eps": n / dt,
+        "us_per_elem": dt / n * 1e6,
+        "elapsed_s": dt,
+        "final_load_frac": float(np.asarray(st.load).sum() /
+                                 (cfg.n_rows * cfg.s)),
+        "curves": curves,
+    }
+
+
+_STREAM_CACHE: dict = {}
+
+
+def stream(n: int, distinct: float, seed: int = 0):
+    key = (n, distinct, seed)
+    if key not in _STREAM_CACHE:
+        _STREAM_CACHE[key] = controlled_distinct_stream(n, distinct, seed)
+        if len(_STREAM_CACHE) > 6:
+            _STREAM_CACHE.pop(next(iter(_STREAM_CACHE)))
+    return _STREAM_CACHE[key]
+
+
+def save_artifact(name: str, obj) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return path
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

@@ -1,0 +1,63 @@
+"""Theorem 3.1 / Lemma 1 numerically + theory-vs-empirical FNR: iterate each
+variant's X recurrence, confirm monotone convergence to 1, compare
+convergence *rates* (the paper's RSBF-converges-faster-than-SBF claim is
+measured against the stable-point SBF baseline), and check the analytic
+FNR factor (1-X)(1-Y) against a measured stream."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DedupConfig
+from repro.core.theory import verify_monotone_convergence, x_series
+
+from .common import csv_row, run_stream_measured, save_artifact, stream
+
+
+def main(fast: bool = False) -> list:
+    rows, out = [], {}
+    n_iter = 50_000 if fast else 200_000
+    for variant in ("rsbf", "bsbf", "bsbfsd", "rlbsbf"):
+        cfg = DedupConfig.for_variant(variant, memory_bits=1 << 15)
+        r = verify_monotone_convergence(cfg, n=n_iter)
+        curves = x_series(cfg, n_iter)
+        # convergence rate: first m with X > 0.99
+        idx = np.argmax(curves.X > 0.99)
+        m99 = int(curves.m[idx]) if curves.X[idx] > 0.99 else -1
+        out[variant] = {**r, "m_at_X99": m99}
+        rows.append(csv_row(
+            f"theory/{variant}", 0.0,
+            f"monotone={r['monotone']};finalX={r['final_X']:.6f};"
+            f"m@X>0.99={m99}"))
+
+    # analytic vs empirical FNR at matched scale (bsbf, small filter)
+    cfg = DedupConfig.for_variant("bsbf", memory_bits=1 << 14,
+                                  batch_size=8192)
+    n = 200_000
+    keys, truth = stream(n, 0.3, seed=5)
+    emp = run_stream_measured(cfg, keys, truth, n_windows=4)
+    th = x_series(cfg, n)
+    # empirical duplicates arrive ~uniformly; compare late-stream FNR factor
+    fnr_factor_theory = float(1 - th.X[-1])
+    # REPRODUCTION FINDING (EXPERIMENTS.md §Theory): the paper's Lemma 1
+    # model predicts X -> 1 (FNR -> 0), but the physical equilibrium is
+    # load -> 1/2 (one set + one clear per insert) => X -> load^k, matching
+    # the paper's own Tables 1-9 (nonzero stable FNR), not its asymptote.
+    load_eq_x = float(emp["final_load_frac"] ** cfg.k)
+    out["bsbf_theory_vs_empirical"] = {
+        "paper_model_late_1mX": fnr_factor_theory,
+        "load_equilibrium_X": load_eq_x,
+        "empirical_late_fnr": emp["curves"][-1]["fnr"],
+        "empirical_final_load": emp["final_load_frac"],
+    }
+    rows.append(csv_row(
+        "theory/bsbf_vs_empirical", emp["us_per_elem"],
+        f"paper_model(1-X)={fnr_factor_theory:.4f};"
+        f"load_eq(1-X)={1-load_eq_x:.4f};"
+        f"emp_fnr={emp['curves'][-1]['fnr']:.4f}"))
+    save_artifact("theory_convergence", out)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,94 @@
+"""Ingest throughput (the paper's §1 'real-time processing at 1 GB/sec'
+requirement): elements/s of the sequential oracle vs the batched engine vs
+the packed/kernels path, plus the per-op cost of the Pallas kernels in
+interpret mode. The batched-vs-scan ratio is the TPU-adaptation headline
+(DESIGN.md §3.1)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Dedup, DedupConfig
+from repro.core.hashing import derive_seeds
+from repro.core.packed import split_pos
+from repro.kernels import ops
+
+from .common import csv_row, save_artifact, stream
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                                   # warm-up/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(fast: bool = False) -> list:
+    rows, out = [], {}
+    n = 2_000_000 // (4 if fast else 1)
+    keys, truth = stream(n, 0.6, seed=9)
+    jkeys = jnp.asarray(keys)
+
+    for name, cfg in [
+        ("batched_dense8", DedupConfig.for_variant(
+            "rlbsbf", memory_bits=1 << 21, batch_size=8192)),
+        ("batched_packed", DedupConfig.for_variant(
+            "rlbsbf", memory_bits=1 << 21, batch_size=8192, packed=True)),
+    ]:
+        d = Dedup(cfg)
+        st = d.init()
+        st, _ = d.run_stream(st, jkeys[:cfg.batch_size * 2])   # compile
+        t0 = time.perf_counter()
+        _st, dup = d.run_stream(d.init(), jkeys)
+        np.asarray(dup)
+        dt = time.perf_counter() - t0
+        eps = n / dt
+        out[name] = {"eps": eps, "us_per_elem": dt / n * 1e6}
+        rows.append(csv_row(f"throughput/{name}", dt / n * 1e6,
+                            f"elems_per_s={eps:.0f}"))
+
+    # sequential oracle on a small prefix (it is the semantics oracle,
+    # not the production path)
+    n_seq = 50_000
+    cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 16)
+    d = Dedup(cfg)
+    st, _ = d.run_stream_oracle(d.init(), jkeys[:1000])        # compile
+    t0 = time.perf_counter()
+    _, dup = d.run_stream_oracle(d.init(), jkeys[:n_seq])
+    np.asarray(dup)
+    dt = time.perf_counter() - t0
+    out["oracle_scan"] = {"eps": n_seq / dt}
+    rows.append(csv_row("throughput/oracle_scan", dt / n_seq * 1e6,
+                        f"elems_per_s={n_seq/dt:.0f}"))
+    out["batched_speedup_vs_scan"] = out["batched_dense8"]["eps"] / \
+        out["oracle_scan"]["eps"]
+    rows.append(csv_row(
+        "throughput/batched_speedup", 0.0,
+        f"x={out['batched_speedup_vs_scan']:.1f}"))
+
+    # kernel micro-benchmarks (interpret mode on CPU — correctness-path cost;
+    # TPU perf is modeled in §Roofline, not measured here)
+    b, k, s = 8192, 2, 1 << 20
+    kk = jkeys[:b]
+    seeds = derive_seeds(1, k)
+    dt = _time(lambda: ops.hash_positions(kk, seeds, s))
+    rows.append(csv_row("kernel/hashmix_interpret", dt / b * 1e6,
+                        f"batch={b}"))
+    words = jnp.zeros((k, s // 32), jnp.uint32)
+    pos = ops.hash_positions(kk, seeds, s)
+    widx, mask = split_pos(pos)
+    dt = _time(lambda: ops.probe(words, widx, mask))
+    rows.append(csv_row("kernel/bloom_probe_interpret", dt / b * 1e6,
+                        f"batch={b}"))
+    save_artifact("throughput", out)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,47 @@
+"""End-to-end driver: LM training with the dedup data pipeline in front.
+
+    PYTHONPATH=src python examples/dedup_training.py            # CPU demo
+    PYTHONPATH=src python examples/dedup_training.py --preset 100m --steps 300
+
+The corpus replays ~30% duplicate documents (web-crawl style); the
+DedupPipeline (RLBSBF) zeroes their loss weights so the optimizer never
+consumes a document twice. Fault tolerance is live: pass --inject-fault 40
+to watch the trainer checkpoint-restore and keep going. The ``100m`` preset
+is the assignment's ~100M-param configuration for real hardware; the default
+``cpu-small`` preset demonstrates the identical code path on this container.
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.launch.train import build
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="cpu-small")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dup-frac", type=float, default=0.3)
+    ap.add_argument("--inject-fault", type=int, default=-1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    trainer = build(args.preset, args.steps, args.dup_frac, args.ckpt_dir,
+                    fault_at=args.inject_fault)
+    summary = trainer.run()
+
+    losses = [h["loss"] for h in trainer.history]
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    m = trainer.dedup.metrics.summary()
+    print("\n=== end-to-end summary ===")
+    print(f"steps:            {summary['steps']}")
+    print(f"loss:             {first:.4f} -> {last:.4f}")
+    print(f"stragglers:       {summary['stragglers']}")
+    print(f"dedup throughput: {m['throughput_eps']:.0f} records/s")
+    print(f"filter load:      {m['final_load']:.4f}")
+    print(f"checkpoints at:   {trainer.ckpt.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — multi-pod JAX framework for streaming approximate de-duplication.
+
+Implements Bera, Dutta, Narang, Bhattacherjee, "Advanced Bloom Filter Based
+Algorithms for Efficient Approximate Data De-Duplication in Streams" (2012)
+as a production training/inference framework: the dedup structures are a
+first-class data-plane stage feeding 10 architecture families under
+pjit/shard_map distribution.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,17 @@
+"""Architecture configs + registry.
+
+``--arch`` ids: codeqwen1.5-7b, qwen3-8b, h2o-danube-3-4b, deepseek-v2-236b,
+mixtral-8x7b, meshgraphnet, wide-deep, xdeepfm, dlrm-rm2, dcn-v2.
+"""
+
+from .registry import all_arch_ids, all_cells, get_arch, ShapeCell
+
+
+def _import_all():
+    from . import gnn_archs, lm_archs, recsys_archs  # noqa: F401
+
+
+_import_all()
+_load_all = True
+
+__all__ = ["all_arch_ids", "all_cells", "get_arch", "ShapeCell"]

@@ -1,0 +1,400 @@
+"""Architecture registry: 10 assigned archs × their shape sets = 40 cells.
+
+Each ArchDef supplies, per shape cell:
+  * ``input_specs``  — global ShapeDtypeStructs for every step input
+  * ``batch_specs``  — PartitionSpecs for those inputs on a given mesh
+  * ``step``         — the jittable step function (train/prefill/decode/...)
+  * ``param_specs``  — sharding rules for the parameter tree
+plus a reduced ``smoke`` configuration for CPU tests.
+
+``--arch <id>`` everywhere resolves through ``get_arch`` / ``ARCHS``.
+Cells that are skipped by assignment rule (long_500k on pure full-attention
+archs) carry a ``skip`` reason instead of specs (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..distributed import sharding as shr
+from ..models import gnn as gnn_mod
+from ..models import recsys as rec_mod
+from ..models import transformer as tfm
+from ..optim import OptimizerConfig, apply_updates, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str                     # train | prefill | decode | infer | retrieval
+    dims: dict
+    skip: Optional[str] = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_axes_or_none(mesh: Mesh, batch: int):
+    """Batch partition axes, dropped when the batch is too small to split."""
+    axes = shr.batch_axes(mesh)
+    if axes and batch % shr.axis_size(mesh, axes) == 0 and batch >= shr.axis_size(mesh, axes):
+        return axes
+    return None
+
+
+# ===================================================================== LM == //
+
+class LMArch:
+    family = "lm"
+
+    def __init__(self, arch_id: str, cfg: tfm.TransformerConfig,
+                 accum: Dict[str, int] | None = None,
+                 smoke_cfg: tfm.TransformerConfig | None = None):
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.accum = accum or {}
+        self._smoke_cfg = smoke_cfg
+        full_attn = cfg.attention == "full"
+        skip = ("long_500k needs sub-quadratic attention; "
+                f"{arch_id} is pure full-attention (DESIGN.md §5)"
+                ) if full_attn else None
+        self.shapes = {
+            "train_4k": ShapeCell("train_4k", "train",
+                                  {"seq": 4096, "batch": 256}),
+            "prefill_32k": ShapeCell("prefill_32k", "prefill",
+                                     {"seq": 32768, "batch": 32}),
+            "decode_32k": ShapeCell("decode_32k", "decode",
+                                    {"seq": 32768, "batch": 128}),
+            "long_500k": ShapeCell("long_500k", "decode",
+                                   {"seq": 524288, "batch": 1}, skip=skip),
+        }
+
+    # ------------------------------------------------------------------ //
+    def opt_config(self) -> OptimizerConfig:
+        return OptimizerConfig(kind="adamw", lr=3e-4)
+
+    def params_shape(self):
+        return jax.eval_shape(lambda k: tfm.init(self.cfg, k),
+                              jax.random.PRNGKey(0))
+
+    def param_specs(self, mesh: Mesh, fsdp: Optional[bool] = None):
+        if fsdp is None:
+            fsdp = self.cfg.param_count() > 3e10   # big models: FSDP over data
+        return shr.transformer_param_specs(self.cfg, mesh,
+                                           self.params_shape(), fsdp=fsdp)
+
+    def opt_specs(self, mesh: Mesh):
+        pspecs = self.param_specs(mesh)
+        pshapes = self.params_shape()
+        m_specs = jax.tree.map(
+            lambda s, sh: shr.zero_shard_spec(s, sh.shape, mesh),
+            pspecs, pshapes)
+        from ..optim.optimizers import OptState
+        return OptState(step=P(), m=m_specs, v=m_specs)
+
+    # ------------------------------------------------------------------ //
+    def input_specs(self, shape: str) -> dict:
+        cell = self.shapes[shape]
+        d = cell.dims
+        if cell.kind == "train":
+            return {"tokens": _sds((d["batch"], d["seq"] + 1), jnp.int32),
+                    "weights": _sds((d["batch"],), jnp.float32)}
+        if cell.kind == "prefill":
+            return {"tokens": _sds((d["batch"], d["seq"]), jnp.int32)}
+        # decode: one new token against a seq-long cache
+        cache = tfm.cache_spec(self.cfg, d["batch"], d["seq"])
+        return {"cache": cache,
+                "token": _sds((d["batch"],), jnp.int32),
+                "pos": _sds((d["batch"],), jnp.int32)}
+
+    def batch_specs(self, shape: str, mesh: Mesh) -> dict:
+        cell = self.shapes[shape]
+        d = cell.dims
+        b_ax = _batch_axes_or_none(mesh, d["batch"])
+        if cell.kind == "train":
+            return {"tokens": P(b_ax, None), "weights": P(b_ax)}
+        if cell.kind == "prefill":
+            return {"tokens": P(b_ax, None)}
+        cache_shape = tfm.cache_spec(self.cfg, d["batch"], d["seq"])
+        cache_specs = shr.transformer_cache_specs(self.cfg, mesh, cache_shape)
+        if b_ax is None:   # batch too small to split (long_500k b=1)
+            bset = set(shr.batch_axes(mesh))
+
+            def strip(e):
+                if e is None or isinstance(e, P):
+                    return e
+                if isinstance(e, str):
+                    return None if e in bset else e
+                kept = tuple(a for a in e if a not in bset)
+                return kept or None
+
+            cache_specs = jax.tree.map(
+                lambda p: P(*(strip(e) for e in p)), cache_specs,
+                is_leaf=lambda x: isinstance(x, P))
+        return {"cache": cache_specs, "token": P(b_ax), "pos": P(b_ax)}
+
+    # ------------------------------------------------------------------ //
+    def step(self, shape: str) -> Callable:
+        cell = self.shapes[shape]
+        cfg = self.cfg
+        if cell.kind == "train":
+            opt_cfg = self.opt_config()
+            accum = self.accum.get(shape, 1)
+            from ..train.steps import make_train_step
+
+            def loss_fn(params, batch, weights):
+                loss, _ = tfm.forward(cfg, params, batch, weights)
+                return loss
+
+            inner = make_train_step(
+                lambda p, b, w: loss_fn(p, b, w), opt_cfg, accum_steps=accum)
+
+            def train_step(params, opt_state, tokens, weights):
+                return inner(params, opt_state, tokens, weights)
+
+            return train_step
+        if cell.kind == "prefill":
+            def prefill_step(params, tokens):
+                logits = tfm.prefill(cfg, params, tokens)
+                return logits[:, -1]          # serving emits last-token logits
+            return prefill_step
+
+        def serve_step(params, cache, token, pos):
+            return tfm.decode_step(cfg, params, cache, token, pos)
+        return serve_step
+
+    # ------------------------------------------------------------------ //
+    def smoke(self):
+        cfg = self._smoke_cfg or dataclasses.replace(
+            self.cfg, n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=min(4, self.cfg.n_kv_heads),
+            head_dim=16, d_ff=128, vocab=512,
+            d_ff_expert=32 if self.cfg.is_moe else 0,
+            n_experts=min(4, self.cfg.n_experts),
+            moe_top_k=min(self.cfg.moe_top_k,
+                          max(1, min(4, self.cfg.n_experts))),
+            q_lora_rank=32 if self.cfg.q_lora_rank else 0,
+            kv_lora_rank=32 if self.cfg.use_mla else 512,
+            qk_nope_dim=16 if self.cfg.use_mla else 128,
+            qk_rope_dim=8 if self.cfg.use_mla else 64,
+            v_head_dim=16 if self.cfg.use_mla else 128,
+            window=16 if self.cfg.attention == "swa" else 4096,
+            dtype=jnp.float32, remat="none",
+            attn_q_block=32, attn_k_block=32)
+        return cfg
+
+
+# ==================================================================== GNN == //
+
+class GNNArch:
+    family = "gnn"
+
+    def __init__(self, arch_id: str, base_cfg: gnn_mod.GNNConfig):
+        self.arch_id = arch_id
+        self.base_cfg = base_cfg
+        self.shapes = {
+            "full_graph_sm": ShapeCell(
+                "full_graph_sm", "train",
+                {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433}),
+            "minibatch_lg": ShapeCell(
+                "minibatch_lg", "train",
+                # sampled-subgraph worst case: 1024 seeds, fanout (15, 10)
+                {"n_nodes": 1024 * (1 + 15 + 150),
+                 "n_edges": 1024 * (15 + 150), "d_feat": 602,
+                 "graph_nodes": 232_965, "graph_edges": 114_615_892,
+                 "batch_nodes": 1024, "fanout": (15, 10)}),
+            "ogb_products": ShapeCell(
+                "ogb_products", "train",
+                {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100,
+                 "shard_over_model": True}),
+            "molecule": ShapeCell(
+                "molecule", "train",
+                {"n_nodes": 30 * 128, "n_edges": 64 * 128, "d_feat": 16}),
+        }
+
+    def cfg_for(self, shape: str) -> gnn_mod.GNNConfig:
+        d = self.shapes[shape].dims
+        return dataclasses.replace(self.base_cfg, d_node_in=d["d_feat"])
+
+    def opt_config(self) -> OptimizerConfig:
+        return OptimizerConfig(kind="adamw", lr=1e-3, weight_decay=0.0)
+
+    def params_shape(self, shape: str):
+        cfg = self.cfg_for(shape)
+        return jax.eval_shape(lambda k: gnn_mod.init(cfg, k),
+                              jax.random.PRNGKey(0))
+
+    def param_specs(self, mesh: Mesh, shape: str = "full_graph_sm"):
+        return shr.gnn_param_specs(mesh, self.params_shape(shape))
+
+    @staticmethod
+    def _pad4k(n: int) -> int:
+        """Graphs are padded (masked) to multiples of 4096 so node/edge dims
+        divide every mesh extent (16/32/256/512)."""
+        return ((n + 4095) // 4096) * 4096
+
+    def input_specs(self, shape: str) -> dict:
+        d = self.shapes[shape].dims
+        N, E, F = self._pad4k(d["n_nodes"]), self._pad4k(d["n_edges"]), d["d_feat"]
+        cfg = self.cfg_for(shape)
+        return {"batch": {
+            "nodes": _sds((N, F), jnp.float32),
+            "edges": _sds((E, 8), jnp.float32),
+            "src": _sds((E,), jnp.int32), "dst": _sds((E,), jnp.int32),
+            "edge_mask": _sds((E,), jnp.bool_),
+            "node_mask": _sds((N,), jnp.bool_),
+            "targets": _sds((N, cfg.d_out), jnp.float32),
+        }}
+
+    def batch_specs(self, shape: str, mesh: Mesh) -> dict:
+        over_model = self.shapes[shape].dims.get("shard_over_model", False)
+        return {"batch": shr.gnn_batch_specs(mesh, over_model)}
+
+    def step(self, shape: str) -> Callable:
+        cfg = self.cfg_for(shape)
+        opt_cfg = self.opt_config()
+
+        def train_step(params, opt_state, batch, weights=None):
+            def loss(p):
+                return gnn_mod.loss_fn(cfg, p, batch, weights)
+            l, grads = jax.value_and_grad(loss)(params)
+            params2, opt_state2, metrics = apply_updates(
+                opt_cfg, params, grads, opt_state)
+            metrics["loss"] = l
+            return params2, opt_state2, metrics
+
+        return train_step
+
+    def smoke(self):
+        return dataclasses.replace(self.base_cfg, n_layers=3, d_hidden=32,
+                                   d_node_in=16)
+
+
+# ================================================================= RecSys == //
+
+class RecsysArch:
+    family = "recsys"
+
+    def __init__(self, arch_id: str, cfg: rec_mod.RecSysConfig):
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.shapes = {
+            "train_batch": ShapeCell("train_batch", "train", {"batch": 65536}),
+            "serve_p99": ShapeCell("serve_p99", "infer", {"batch": 512}),
+            "serve_bulk": ShapeCell("serve_bulk", "infer", {"batch": 262144}),
+            "retrieval_cand": ShapeCell("retrieval_cand", "retrieval",
+                                        {"batch": 1, "n_cand": 1_000_000}),
+        }
+
+    def opt_config(self) -> OptimizerConfig:
+        return OptimizerConfig(kind="adamw", lr=1e-3, weight_decay=0.0)
+
+    def params_shape(self):
+        return jax.eval_shape(lambda k: rec_mod.init(self.cfg, k),
+                              jax.random.PRNGKey(0))
+
+    def param_specs(self, mesh: Mesh):
+        return shr.recsys_param_specs(mesh, self.params_shape())
+
+    def input_specs(self, shape: str) -> dict:
+        cell = self.shapes[shape]
+        d = cell.dims
+        B = d["batch"]
+        F = self.cfg.n_sparse
+        ids_shape = (B, F) if self.cfg.multi_hot == 1 else (
+            B, F, self.cfg.multi_hot)
+        base = {"dense": _sds((B, self.cfg.n_dense), jnp.float32),
+                "sparse_ids": _sds(ids_shape, jnp.int32)}
+        if cell.kind == "train":
+            return {"batch": {**base, "labels": _sds((B,), jnp.float32)},
+                    "weights": _sds((B,), jnp.float32)}
+        if cell.kind == "retrieval":
+            return {"batch": {**base,
+                              "candidates": _sds((d["n_cand"],
+                                                  self.cfg.embed_dim),
+                                                 jnp.float32)}}
+        return {"batch": base}
+
+    def batch_specs(self, shape: str, mesh: Mesh) -> dict:
+        cell = self.shapes[shape]
+        b_ax = _batch_axes_or_none(mesh, cell.dims["batch"])
+        if cell.kind == "retrieval":
+            spec = shr.recsys_batch_specs(mesh, retrieval=True)
+            return {"batch": spec}
+        base = {"dense": P(b_ax, None), "sparse_ids": P(
+            *( [b_ax, None] if self.cfg.multi_hot == 1 else [b_ax, None, None]))}
+        if cell.kind == "train":
+            return {"batch": {**base, "labels": P(b_ax)},
+                    "weights": P(b_ax)}
+        return {"batch": base}
+
+    def step(self, shape: str) -> Callable:
+        cell = self.shapes[shape]
+        cfg = self.cfg
+        if cell.kind == "train":
+            opt_cfg = self.opt_config()
+
+            def train_step(params, opt_state, batch, weights):
+                def loss(p):
+                    return rec_mod.loss_fn(cfg, p, batch, weights)
+                l, grads = jax.value_and_grad(loss)(params)
+                params2, opt_state2, metrics = apply_updates(
+                    opt_cfg, params, grads, opt_state)
+                metrics["loss"] = l
+                return params2, opt_state2, metrics
+            return train_step
+        if cell.kind == "retrieval":
+            def retrieval_step(params, batch):
+                return rec_mod.retrieval_scores(cfg, params, batch)
+            return retrieval_step
+
+        def infer_step(params, batch):
+            return rec_mod.forward(cfg, params, batch)
+        return infer_step
+
+    def smoke(self):
+        return dataclasses.replace(
+            self.cfg, vocab_sizes=tuple(min(v, 1000)
+                                        for v in self.cfg.vocab_sizes))
+
+
+# ================================================================ registry == //
+
+_REGISTRY: Dict[str, Callable[[], object]] = {}
+
+
+def register(arch_id: str):
+    def deco(fn):
+        _REGISTRY[arch_id] = fn
+        return fn
+    return deco
+
+
+def get_arch(arch_id: str):
+    from . import _load_all   # noqa: F401 — populate registry
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def all_arch_ids() -> list:
+    from . import _load_all   # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def all_cells():
+    """Every (arch_id, shape_name, skip_reason) — the 40 assigned cells."""
+    out = []
+    for aid in all_arch_ids():
+        arch = get_arch(aid)
+        for sname, cell in arch.shapes.items():
+            out.append((aid, sname, cell.skip))
+    return out

@@ -1,0 +1,172 @@
+"""Batched (vectorized) engine — the TPU-shaped semantics.
+
+Processes B stream elements per step:
+
+  1. hash all B keys (fused k-way hashing — `kernels/hashmix` on TPU),
+  2. probe the batch-entry snapshot of the filters,
+  3. *exact* intra-batch first-occurrence detection (sort by key): a later
+     equal key inside the batch is always reported duplicate,
+  4. vectorized per-variant insert/delete decisions using per-element stream
+     positions ``i_t = position + t``,
+  5. one scatter pass: deletions from the snapshot first, then insertions
+     (insertions win — conservative w.r.t. false negatives).
+
+Divergence from the sequential oracle is bounded (deletions can't wipe
+same-batch insertions; RSBF may report a within-batch repeat of a *rejected*
+first occurrence as duplicate) and is measured in tests/benchmarks.
+
+``valid`` masks let ragged stream tails ride through fixed-shape jit steps as
+no-ops.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import DedupConfig
+from .hashing import derive_seeds, hash_positions
+from .packed import probe_packed, scatter_andnot, scatter_or, split_pos, popcount
+from .state import FilterState
+
+
+class BatchResult(NamedTuple):
+    dup: jnp.ndarray        # (B,) bool — reported duplicate
+    inserted: jnp.ndarray   # (B,) bool — element was inserted into the filters
+
+
+BatchedStep = Callable[[FilterState, jnp.ndarray, jnp.ndarray],
+                       Tuple[FilterState, BatchResult]]
+
+
+def intra_batch_seen(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """(B,) bool: True where an equal *valid* key occurs earlier in the batch.
+
+    Sort-based: stable argsort on (key, index) keeps original order within
+    equal keys, so "equal to predecessor in sorted order" == "has an earlier
+    occurrence". Invalid lanes are pushed to the end with a sentinel.
+    """
+    b = keys.shape[0]
+    sk = jnp.where(valid, keys, jnp.uint32(0xFFFFFFFF))
+    order = jnp.argsort(sk, stable=True)
+    sorted_keys = sk[order]
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((1,), bool), sorted_keys[1:] == sorted_keys[:-1]])
+    seen = jnp.zeros((b,), bool).at[order].set(dup_sorted)
+    return seen & valid
+
+
+def make_batched_step(cfg: DedupConfig) -> BatchedStep:
+    cfg = cfg.validate()
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    s, k = cfg.s, cfg.k
+    rows = jnp.arange(k, dtype=jnp.int32)
+
+    # ---------------- SBF baseline (counter cells, unpacked only) -------- //
+    if cfg.variant == "sbf":
+        if cfg.packed:
+            raise ValueError("SBF uses counters; packed layout unsupported")
+        p_run, cmax = cfg.sbf_p_effective, cfg.sbf_max
+
+        def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+            b = keys.shape[0]
+            pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)                  # (B, k)
+            vals = state.bits[0, pos]                             # (B, k)
+            dup = jnp.all(vals > 0, axis=1) & valid
+            rng, r = jax.random.split(state.rng)
+            start = jax.random.randint(r, (b,), 0, s, dtype=jnp.int32)
+            run = (start[:, None] + jnp.arange(p_run, dtype=jnp.int32)) % s
+            run = jnp.where(valid[:, None], run, s)               # drop pads
+            dec = jnp.zeros((s,), jnp.int32).at[run.reshape(-1)].add(
+                1, mode="drop")
+            cells = jnp.maximum(state.bits[0].astype(jnp.int32) - dec, 0)
+            bits = cells.astype(jnp.uint8)[None, :]
+            set_pos = jnp.where(valid[:, None], pos, s)
+            bits = bits.at[0, set_pos.reshape(-1)].set(jnp.uint8(cmax),
+                                                       mode="drop")
+            load = jnp.array([(bits[0] > 0).sum(dtype=jnp.int32)])
+            n_valid = valid.sum(dtype=jnp.int32)
+            new = FilterState(bits, state.position + n_valid, load, rng)
+            return new, BatchResult(dup=dup, inserted=valid)
+
+        return step
+
+    # ---------------- 1-bit variants ------------------------------------ //
+    def probe(bits, pos):
+        if cfg.packed:
+            return probe_packed(bits, pos)                        # (B, k)
+        return bits[rows[None, :], pos]
+
+    def apply_updates(bits, pos, ins_mask, del_pos, del_mask):
+        """Deletions (snapshot) then insertions. (B,k) ins/del masks."""
+        if cfg.packed:
+            W = bits.shape[1]
+            dw, dm = split_pos(del_pos)
+            dw = jnp.where(del_mask, dw, W)
+            bits = scatter_andnot(bits, dw, dm)
+            iw, im = split_pos(pos)
+            iw = jnp.where(ins_mask, iw, W)
+            bits = scatter_or(bits, iw, im)
+            return bits
+        dp = jnp.where(del_mask, del_pos, s)
+        bits = bits.at[rows[None, :], dp].set(0, mode="drop")
+        ip = jnp.where(ins_mask, pos, s)
+        bits = bits.at[rows[None, :], ip].set(1, mode="drop")
+        return bits
+
+    def recompute_load(bits):
+        if cfg.packed:
+            return popcount(bits)
+        return bits.astype(jnp.int32).sum(axis=1)
+
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+        b = keys.shape[0]
+        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)                      # (B, k)
+        vals = probe(state.bits, pos)                             # (B, k)
+        filter_dup = jnp.all(vals == 1, axis=1)
+        seen = intra_batch_seen(keys, valid)
+        dup = (filter_dup | seen) & valid
+        distinct = valid & ~dup
+        rng, r_ins, r_del, r_aux = jax.random.split(state.rng, 4)
+        del_pos = jax.random.randint(r_del, (b, k), 0, s, dtype=jnp.int32)
+
+        if cfg.variant == "rsbf":
+            i_t = state.position + jnp.arange(b, dtype=jnp.int32)
+            p_ins = jnp.float32(s) / i_t.astype(jnp.float32)
+            ph1 = i_t <= s
+            ph3 = p_ins <= cfg.p_star
+            bern = jax.random.uniform(r_ins, (b,)) < p_ins
+            insert = jnp.where(
+                ph1, valid,
+                jnp.where(ph3, distinct, distinct & bern))
+            ph2_del = ((~ph1) & (~ph3) & insert)[:, None]
+            ph3_del = (ph3 & insert)[:, None] & (vals == 0)
+            del_mask = jnp.where(ph3[:, None], ph3_del,
+                                 jnp.broadcast_to(ph2_del, (b, k)))
+        elif cfg.variant == "bsbf":
+            insert = distinct
+            del_mask = jnp.broadcast_to(insert[:, None], (b, k))
+        elif cfg.variant == "bsbfsd":
+            insert = distinct
+            which = jax.random.randint(r_aux, (b,), 0, k, dtype=jnp.int32)
+            del_mask = insert[:, None] & (which[:, None] == rows[None, :])
+        elif cfg.variant == "rlbsbf":
+            insert = distinct
+            u = jax.random.uniform(r_aux, (b, k))
+            p_del = state.load.astype(jnp.float32)[None, :] / jnp.float32(s)
+            del_mask = insert[:, None] & (u < p_del)
+        else:
+            raise ValueError(cfg.variant)
+
+        ins_mask = jnp.broadcast_to(insert[:, None], (b, k))
+        bits = apply_updates(state.bits, pos, ins_mask, del_pos, del_mask)
+        load = recompute_load(bits)
+        n_valid = valid.sum(dtype=jnp.int32)
+        new = FilterState(bits, state.position + n_valid, load, rng)
+        return new, BatchResult(dup=dup, inserted=insert)
+
+    return step

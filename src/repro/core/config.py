@@ -1,0 +1,141 @@
+"""Configuration for the de-duplication structures.
+
+Mirrors the paper's parameterization: total memory M (bits), number of
+filters/hashes k, the RSBF threshold p* (=0.03 in all paper experiments,
+Section 6), and the SBF baseline's (Max, P) from Deng & Rafiei SIGMOD'06.
+
+``k_from_fpr_t`` implements Eq. (6.1):  k = ln(FPR_t) / ln(1 - 1/e).
+``rsbf_k``      implements the paper's trade-off: the arithmetic mean of 1 and
+                Eq. (6.1)'s k (Section 6.1).
+``sbf_optimal_p`` solves Deng & Rafiei's stable-point equation for P so the
+                SBF baseline is configured at *its* best, keeping the
+                comparison fair (Section 2 discussion / SBF paper Thm 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+VARIANTS = ("sbf", "rsbf", "bsbf", "bsbfsd", "rlbsbf")
+
+
+def k_from_fpr_t(fpr_t: float) -> int:
+    """Eq. (6.1): number of Bloom filters from the target FPR."""
+    k = math.log(fpr_t) / math.log(1.0 - 1.0 / math.e)
+    return max(1, int(round(k)))
+
+
+def rsbf_k(fpr_t: float) -> int:
+    """RSBF trade-off (Section 6.1): mean of 1 and Eq. (6.1)."""
+    return max(1, int(round((1 + k_from_fpr_t(fpr_t)) / 2)))
+
+
+def sbf_stable_zero_fraction(p: float, k: int, m_cells: int, cmax: int) -> float:
+    """Deng & Rafiei Thm 2: stable expected fraction of zero cells."""
+    denom = 1.0 + 1.0 / (p * (1.0 / k - 1.0 / m_cells))
+    return (1.0 / denom) ** cmax
+
+
+def sbf_optimal_p(fpr_t: float, k: int, m_cells: int, cmax: int) -> int:
+    """Binary-search P so the stable FPR hits fpr_t (larger P => more evict
+    => fewer ones => lower FPR but higher FNR)."""
+    lo, hi = 1, max(4, m_cells // max(k, 1))
+    for _ in range(64):
+        mid = (lo + hi) // 2
+        zeros = sbf_stable_zero_fraction(float(mid), k, m_cells, cmax)
+        fpr = (1.0 - zeros) ** k
+        if fpr > fpr_t:
+            lo = mid + 1  # need more eviction
+        else:
+            hi = mid
+        if lo >= hi:
+            break
+    return max(1, lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class DedupConfig:
+    """Static configuration — everything the jitted engines close over."""
+
+    variant: str = "rlbsbf"
+    memory_bits: int = 1 << 23          # M (bits). Paper sweeps 64MB..512MB.
+    k: int = 2                           # number of filters == hashes (paper sets 2)
+    fpr_t: float = 0.1                   # target FPR used to derive k when k=None
+    p_star: float = 0.03                 # RSBF threshold (paper Section 6)
+    seed: int = 0x5EED
+    # --- SBF baseline (Deng & Rafiei) ---
+    sbf_max: int = 3                     # counter cap  => 2 bits/cell
+    sbf_p: Optional[int] = None          # eviction count; None => optimal
+    # --- engine knobs ---
+    batch_size: int = 8192               # batched-engine width
+    packed: bool = False                 # uint32-packed words vs uint8/bit
+    block_bits: int = 0                  # >0: blocked layout, 2^b-bit blocks
+                                         # (VMEM-tile locality; DESIGN §3.3)
+    delete_set_bits_only: bool = False   # phase-3 RSBF "find a set bit" (scan engine)
+    # --- distribution ---
+    shards: int = 1                      # key-space partitions (devices)
+
+    # ------------------------------------------------------------------ //
+    @property
+    def bits_per_cell(self) -> int:
+        if self.variant == "sbf":
+            return max(1, (self.sbf_max).bit_length())
+        return 1
+
+    @property
+    def s(self) -> int:
+        """Bits per filter (paper: s = M/k), or cells for SBF's single array
+        (cells = M / bits_per_cell) — per shard, for memory parity."""
+        per_shard = self.memory_bits // max(1, self.shards)
+        if self.variant == "sbf":
+            return max(8, per_shard // self.bits_per_cell)
+        return max(8, per_shard // self.k)
+
+    @property
+    def n_rows(self) -> int:
+        """Rows of the bits array: SBF keeps one shared cell array probed by
+        k hashes (Deng & Rafiei layout); the paper's variants keep k filters."""
+        return 1 if self.variant == "sbf" else self.k
+
+    @property
+    def s_words(self) -> int:
+        return (self.s + 31) // 32
+
+    @property
+    def sbf_p_effective(self) -> int:
+        if self.variant != "sbf":
+            return 0
+        if self.sbf_p is not None:
+            return self.sbf_p
+        return sbf_optimal_p(self.fpr_t, self.k, self.s, self.sbf_max)
+
+    @property
+    def rsbf_phase3_start(self) -> int:
+        """First stream position where s/i <= p*  (the paper's point ``p``)."""
+        return int(math.ceil(self.s / self.p_star))
+
+    def validate(self) -> "DedupConfig":
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant!r}; one of {VARIANTS}")
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+        if self.s < 8:
+            raise ValueError("filter too small: raise memory_bits or lower k/shards")
+        if not (0.0 < self.p_star < 1.0):
+            raise ValueError("p_star in (0,1)")
+        return self
+
+    @staticmethod
+    def for_variant(variant: str, memory_bits: int, fpr_t: float = 0.1,
+                    **kw) -> "DedupConfig":
+        """Paper parameterization: derive k per Section 6.1."""
+        if variant == "rsbf":
+            k = rsbf_k(fpr_t)
+        elif variant == "sbf":
+            k = kw.pop("k", 3)
+        else:
+            k = kw.pop("k", 2)  # paper settles on k=2 for BSBF/BSBFSD/RLBSBF
+        return DedupConfig(variant=variant, memory_bits=memory_bits, k=k,
+                           fpr_t=fpr_t, **kw).validate()

@@ -1,0 +1,87 @@
+"""Public de-duplication engine.
+
+    cfg   = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 23)
+    dedup = Dedup(cfg)
+    state = dedup.init()
+    state, dup = dedup.process(state, keys)          # batched, jitted
+    state, dup = dedup.run_stream(state, long_keys)  # auto-batched scan
+    state, dup = dedup.run_stream_oracle(state, keys)  # sequential reference
+
+All entry points are functionally pure: state in, state out — which is what
+lets the same engine run under pjit/shard_map (see repro.dedup.sharded) and be
+checkpointed mid-stream (see repro.checkpoint).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .batched import BatchResult, make_batched_step
+from .config import DedupConfig
+from .state import FilterState, init_state
+from .variants import make_scan_step
+
+
+class Dedup:
+    def __init__(self, cfg: DedupConfig):
+        self.cfg = cfg.validate()
+        self._batched = jax.jit(make_batched_step(cfg))
+        if not cfg.packed:
+            self._scan_step = make_scan_step(cfg)
+
+    # ------------------------------------------------------------------ //
+    def init(self, seed: int | None = None) -> FilterState:
+        return init_state(self.cfg, seed)
+
+    def process(self, state: FilterState, keys: jnp.ndarray,
+                valid: jnp.ndarray | None = None
+                ) -> Tuple[FilterState, BatchResult]:
+        """One batched step. keys (B,) uint32."""
+        if valid is None:
+            valid = jnp.ones(keys.shape, dtype=bool)
+        return self._batched(state, keys.astype(jnp.uint32), valid)
+
+    # ------------------------------------------------------------------ //
+    def run_stream(self, state: FilterState, keys: jnp.ndarray
+                   ) -> Tuple[FilterState, jnp.ndarray]:
+        """Batched engine over a whole (N,) stream via lax.scan; tail padded
+        with invalid lanes. Returns per-element duplicate reports."""
+        b = self.cfg.batch_size
+        n = keys.shape[0]
+        n_pad = (-n) % b
+        keys_p = jnp.pad(keys.astype(jnp.uint32), (0, n_pad))
+        valid = jnp.pad(jnp.ones((n,), bool), (0, n_pad))
+        kb = keys_p.reshape(-1, b)
+        vb = valid.reshape(-1, b)
+        step = make_batched_step(self.cfg)
+
+        def body(st, xs):
+            kk, vv = xs
+            st, res = step(st, kk, vv)
+            return st, res.dup
+
+        state, dups = jax.lax.scan(body, state, (kb, vb))
+        return state, dups.reshape(-1)[:n]
+
+    def run_stream_oracle(self, state: FilterState, keys: jnp.ndarray
+                          ) -> Tuple[FilterState, jnp.ndarray]:
+        """Sequential per-element oracle (paper pseudocode order)."""
+        if self.cfg.packed:
+            raise ValueError("oracle runs on the unpacked layout")
+        state, dups = jax.lax.scan(
+            self._scan_step, state, keys.astype(jnp.uint32))
+        return state, dups
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_engine(cfg: DedupConfig) -> Dedup:
+    return Dedup(cfg)
+
+
+def get_engine(cfg: DedupConfig) -> Dedup:
+    """Engines are stateless w.r.t. streams; cache by (frozen) config."""
+    return _cached_engine(cfg)

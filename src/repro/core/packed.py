@@ -1,0 +1,107 @@
+"""uint32-packed bit operations.
+
+TPUs have no efficient random single-bit scatter; the packed layout stores 32
+bits per lane word and performs:
+
+  * probe:   word gather (lowers to dynamic-slice) + mask test
+  * set/clear scatter: per-bit decomposition + ``.at[].max`` scatter —
+    max-accumulation of {0,1} per bit *is* bitwise OR across duplicate word
+    indices, which makes the batched update a single XLA scatter instead of a
+    read-modify-write loop.
+
+The Pallas kernels in ``repro.kernels`` implement the same contracts with
+explicit VMEM tiling; these jnp forms are their oracles and the fallback path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pack_bits", "unpack_bits", "split_pos", "probe_packed",
+    "scatter_or", "scatter_andnot", "popcount",
+]
+
+_BIT = jnp.uint32(1)
+
+
+def split_pos(pos: jnp.ndarray):
+    """bit position -> (word index int32, single-bit uint32 mask)."""
+    word = (pos // 32).astype(jnp.int32)
+    mask = (_BIT << (pos % 32).astype(jnp.uint32)).astype(jnp.uint32)
+    return word, mask
+
+
+def pack_bits(bits8: jnp.ndarray) -> jnp.ndarray:
+    """(..., s) uint8 {0,1} -> (..., ceil(s/32)) uint32."""
+    s = bits8.shape[-1]
+    pad = (-s) % 32
+    if pad:
+        bits8 = jnp.pad(bits8, [(0, 0)] * (bits8.ndim - 1) + [(0, pad)])
+    b = bits8.reshape(*bits8.shape[:-1], -1, 32).astype(jnp.uint32)
+    weights = (_BIT << jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return (b * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, s: int) -> jnp.ndarray:
+    """(..., W) uint32 -> (..., s) uint8 {0,1}."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    b = (words[..., None] >> shifts) & _BIT
+    return b.reshape(*words.shape[:-1], -1)[..., :s].astype(jnp.uint8)
+
+
+def probe_packed(words: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """words (k, W), pos (..., k) -> (..., k) uint8 bit values.
+    Gather each filter's word then test the bit."""
+    k = words.shape[0]
+    w_idx, mask = split_pos(pos)
+    rows = jnp.arange(k, dtype=jnp.int32)
+    got = words[rows, w_idx]                      # (..., k) gather per filter
+    return ((got & mask) != 0).astype(jnp.uint8)
+
+
+def _bit_delta(w_shape, w_idx, mask):
+    """Accumulate single-bit masks into a packed delta via per-bit scatter-max.
+
+    w_idx (..., ) int32 flat word indices into a (W,) row; mask (...,) uint32
+    single-bit masks. Returns (W,) uint32 with the OR of all masks per word.
+    """
+    W = w_shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((mask[..., None] >> shifts) & _BIT).astype(jnp.uint8)  # (..., 32)
+    flat_idx = w_idx.reshape(-1)
+    flat_bits = bits.reshape(-1, 32)
+    acc = jnp.zeros((W, 32), dtype=jnp.uint8).at[flat_idx].max(
+        flat_bits, mode="drop")                   # max over dup idx == OR
+    weights = (_BIT << shifts).astype(jnp.uint32)
+    return (acc.astype(jnp.uint32) * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def scatter_or(words: jnp.ndarray, w_idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Set bits: words (k, W); w_idx/mask (..., k). Out-of-range idx drop
+    (used to express per-element enable masks)."""
+    k, W = words.shape
+    deltas = []
+    for f in range(k):  # k is tiny (1..5) and static — unrolled
+        deltas.append(_bit_delta(W, w_idx[..., f], mask[..., f]))
+    return words | jnp.stack(deltas)
+
+
+def scatter_andnot(words: jnp.ndarray, w_idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Clear bits (same contract as scatter_or)."""
+    k, W = words.shape
+    deltas = []
+    for f in range(k):
+        deltas.append(_bit_delta(W, w_idx[..., f], mask[..., f]))
+    return words & ~jnp.stack(deltas)
+
+
+def popcount(words: jnp.ndarray) -> jnp.ndarray:
+    """Per-row population count: (k, W) uint32 -> (k,) int32."""
+    x = words
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    return x.astype(jnp.int32).sum(axis=-1)

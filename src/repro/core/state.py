@@ -1,0 +1,53 @@
+"""Filter state pytrees.
+
+``bits`` layout depends on the engine:
+  * unpacked ("dense8"): (k, s) uint8 — one byte per bit (per cell for SBF,
+    holding the counter value). Simple scatters; the reference layout.
+  * packed: (k, W) uint32 — 32 bits per lane word; probed via gather + mask,
+    updated via per-bit scatter-max (see packed.py) or the Pallas kernels.
+
+``position`` is the 1-indexed stream position ``i`` of the *next* element —
+RSBF's insert probability is s/i, so it must survive checkpoint/restart
+(see checkpoint/manager.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import DedupConfig
+
+
+class FilterState(NamedTuple):
+    bits: jnp.ndarray       # (k, s) uint8   or  (k, W) uint32 when packed
+    position: jnp.ndarray   # () int32 — 1-indexed next stream position
+    load: jnp.ndarray       # (k,) int32 — number of set bits (RLBSBF's L(i))
+    rng: jax.Array          # PRNG key for the randomized deletions
+
+    @property
+    def is_packed(self) -> bool:
+        return self.bits.dtype == jnp.uint32
+
+
+def init_state(cfg: DedupConfig, seed: int | None = None) -> FilterState:
+    cfg.validate()
+    seed = cfg.seed if seed is None else seed
+    if cfg.packed:
+        if cfg.variant == "sbf":
+            raise ValueError("packed layout supports 1-bit variants only (SBF has counters)")
+        bits = jnp.zeros((cfg.n_rows, cfg.s_words), dtype=jnp.uint32)
+    else:
+        bits = jnp.zeros((cfg.n_rows, cfg.s), dtype=jnp.uint8)
+    return FilterState(
+        bits=bits,
+        position=jnp.asarray(1, dtype=jnp.int32),
+        load=jnp.zeros((cfg.n_rows,), dtype=jnp.int32),
+        rng=jax.random.PRNGKey(seed),
+    )
+
+
+def state_memory_bytes(state: FilterState) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in state)

@@ -1,0 +1,175 @@
+"""Per-element (sequential) step functions — the *oracle* semantics.
+
+These follow the paper's pseudocode exactly, element-at-a-time, including the
+set/reset ordering inside each algorithm:
+
+  * Algorithm 1 (RSBF):   phase 1 insert-all; phase 2 set-then-reset with
+                          insert prob s/i; phase 3 reset-then-set gated on the
+                          probed bit being 0.
+  * Algorithm 2 (BSBF):   reset k random bits (one per filter) then set H.
+  * Algorithm 3 (BSBFSD): reset 1 random bit in 1 random filter then set H.
+  * Algorithm 4 (RLBSBF): per filter reset a random bit w.p. load/s, then set H.
+  * SBF (Deng & Rafiei):  probe K cells; decrement a contiguous run of P cells
+                          starting at a random offset (their Section 4
+                          implementation optimization — avoids duplicate-draw
+                          ambiguity); set own K cells to Max.
+
+Used via ``jax.lax.scan`` (engine.py) as the bit-exact reference the batched /
+packed / Pallas paths are validated against. Loads are tracked incrementally
+and exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import DedupConfig
+from .hashing import derive_seeds, hash_positions
+from .state import FilterState
+
+Step = Callable[[FilterState, jnp.ndarray], Tuple[FilterState, jnp.ndarray]]
+
+
+def _probe_rows(cfg: DedupConfig) -> jnp.ndarray:
+    """Row index per hash slot: SBF uses one cell array, others one row per
+    filter."""
+    if cfg.variant == "sbf":
+        return jnp.zeros((cfg.k,), dtype=jnp.int32)
+    return jnp.arange(cfg.k, dtype=jnp.int32)
+
+
+def make_scan_step(cfg: DedupConfig) -> Step:
+    cfg = cfg.validate()
+    if cfg.packed:
+        raise ValueError("scan oracle runs on the unpacked (dense8) layout")
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    s, k = cfg.s, cfg.k
+    rows = _probe_rows(cfg)
+
+    if cfg.variant == "sbf":
+        p_run, cmax = cfg.sbf_p_effective, cfg.sbf_max
+
+        def step(state: FilterState, key: jnp.ndarray):
+            pos = hash_positions(key, seeds, s, cfg.block_bits, bseeds)            # (k,)
+            vals = state.bits[rows, pos]
+            dup = jnp.all(vals > 0)
+            rng, r = jax.random.split(state.rng)
+            # decrement contiguous run of P cells (wrapping)
+            start = jax.random.randint(r, (), 0, s, dtype=jnp.int32)
+            run = (start + jnp.arange(p_run, dtype=jnp.int32)) % s
+            dec = jnp.maximum(state.bits[0, run].astype(jnp.int32) - 1, 0)
+            bits = state.bits.at[0, run].set(dec.astype(jnp.uint8))
+            # set own cells to Max (unconditional — this is SBF's refresh)
+            bits = bits.at[rows, pos].set(jnp.uint8(cmax))
+            load = jnp.array([(bits[0] > 0).sum(dtype=jnp.int32)])
+            return FilterState(bits, state.position + 1, load, rng), dup
+
+        return step
+
+    # ---- 1-bit variants ------------------------------------------------ //
+    def probe(bits, pos):
+        return bits[rows, pos]                             # (k,) uint8
+
+    def delta_load(pre_del, do_del, ins_mask, set_val_pre):
+        """Exact incremental load: -1 per cleared set bit, +1 per newly set."""
+        return (ins_mask * (1 - set_val_pre)).astype(jnp.int32) - (
+            do_del * pre_del).astype(jnp.int32)
+
+    if cfg.variant == "rsbf":
+        p_star = cfg.p_star
+
+        def step(state: FilterState, key: jnp.ndarray):
+            pos = hash_positions(key, seeds, s, cfg.block_bits, bseeds)
+            vals = probe(state.bits, pos)
+            dup = jnp.all(vals == 1)
+            distinct = ~dup
+            i = state.position
+            rng, r_ins, r_del, r_pick = jax.random.split(state.rng, 4)
+            p_ins = jnp.float32(s) / i.astype(jnp.float32)
+            ph1 = i <= s
+            ph3 = p_ins <= p_star
+            bern = jax.random.uniform(r_ins, ()) < p_ins
+            insert = jnp.where(ph1, True,
+                               jnp.where(ph3, distinct, distinct & bern))
+            # deletions
+            if cfg.delete_set_bits_only:
+                # phase-3 pseudocode: "find a bit which is set to 1, reset it"
+                # weighted choice over set bits per filter (oracle-only path)
+                u = jax.random.uniform(r_pick, (k,))
+                csum = jnp.cumsum(state.bits.astype(jnp.float32), axis=1)
+                tot = csum[:, -1:]
+                tgt = u[:, None] * tot
+                del_pos = jnp.argmax(csum >= tgt, axis=1).astype(jnp.int32)
+            else:
+                del_pos = jax.random.randint(r_del, (k,), 0, s, dtype=jnp.int32)
+            ph2_del = (~ph1) & (~ph3) & insert                       # all k filters
+            ph3_del = ph3 & insert & (vals == 0)                      # per filter
+            do_del = jnp.where(ph3, ph3_del, jnp.broadcast_to(ph2_del, (k,)))
+            ins_mask = jnp.broadcast_to(insert, (k,))
+
+            bits = state.bits
+            # phase 2 order: set H then reset;  phase 3 order: reset then set
+            def ph2_order(bits):
+                b = bits.at[rows, jnp.where(ins_mask, pos, s)].set(1, mode="drop")
+                pre = b[rows, del_pos]
+                b = b.at[rows, jnp.where(do_del, del_pos, s)].set(0, mode="drop")
+                return b, pre
+
+            def ph3_order(bits):
+                pre = bits[rows, del_pos]
+                b = bits.at[rows, jnp.where(do_del, del_pos, s)].set(0, mode="drop")
+                b = b.at[rows, jnp.where(ins_mask, pos, s)].set(1, mode="drop")
+                return b, pre
+
+            b2, pre2 = ph2_order(bits)
+            b3, pre3 = ph3_order(bits)
+            use3 = ph3 | ph1                                          # ph1 has no deletes
+            new_bits = jnp.where(use3, b3, b2)
+            # exact load delta (recompute the two orders' contributions)
+            set_pre2 = bits[rows, pos]
+            after_del3 = jnp.where(do_del & (del_pos == pos), 0, bits[rows, pos])
+            dl2 = (ins_mask * (1 - set_pre2)).astype(jnp.int32) - (
+                do_del * pre2).astype(jnp.int32)
+            dl3 = (ins_mask * (1 - after_del3)).astype(jnp.int32) - (
+                do_del * pre3).astype(jnp.int32)
+            load = state.load + jnp.where(use3, dl3, dl2)
+            return FilterState(new_bits, i + 1, load, rng), dup
+
+        return step
+
+    if cfg.variant in ("bsbf", "bsbfsd", "rlbsbf"):
+
+        def step(state: FilterState, key: jnp.ndarray):
+            pos = hash_positions(key, seeds, s, cfg.block_bits, bseeds)
+            vals = probe(state.bits, pos)
+            dup = jnp.all(vals == 1)
+            distinct = ~dup
+            rng, r_del, r_aux = jax.random.split(state.rng, 3)
+            del_pos = jax.random.randint(r_del, (k,), 0, s, dtype=jnp.int32)
+            if cfg.variant == "bsbf":
+                do_del = jnp.broadcast_to(distinct, (k,))
+            elif cfg.variant == "bsbfsd":
+                which = jax.random.randint(r_aux, (), 0, k, dtype=jnp.int32)
+                do_del = distinct & (jnp.arange(k) == which)
+            else:  # rlbsbf
+                u = jax.random.uniform(r_aux, (k,))
+                p_del = state.load.astype(jnp.float32) / jnp.float32(s)
+                do_del = distinct & (u < p_del)
+            ins_mask = jnp.broadcast_to(distinct, (k,))
+            # Algorithms 2-4: reset first, then set H
+            pre_del = state.bits[rows, del_pos]
+            bits = state.bits.at[rows, jnp.where(do_del, del_pos, s)].set(
+                0, mode="drop")
+            set_pre = bits[rows, pos]
+            bits = bits.at[rows, jnp.where(ins_mask, pos, s)].set(1, mode="drop")
+            load = state.load + delta_load(pre_del, do_del, ins_mask, set_pre)
+            return FilterState(bits, state.position + 1, load, rng), dup
+
+        return step
+
+    raise ValueError(cfg.variant)

@@ -1,0 +1,5 @@
+"""Data plane: synthetic streams, LM/graph/recsys batch generation."""
+
+from . import graphs, lm, recsys_data, streams
+
+__all__ = ["graphs", "lm", "recsys_data", "streams"]

@@ -1,0 +1,104 @@
+"""Synthetic key streams matching the paper's experimental setup (Section 6).
+
+The paper evaluates on (a) uniform random datasets of up to 1B records with a
+controlled percentage of distinct elements (15% / 60% / 90%), and (b) a real
+clickstream (~3M records). We generate:
+
+  * ``controlled_distinct_stream`` — EXACTLY the target distinct fraction,
+    with exact ground truth as a by-product (new elements get fresh ids at
+    uniformly random positions; duplicates resample the already-seen prefix
+    uniformly, like the paper's finite-universe redraw);
+  * ``zipf_stream`` — skewed key popularity (clickstream-like);
+  * ``clickstream`` — sessionized zipf traffic with fraud-style duplicate
+    bursts (the paper's §1 click-fraud application) for the examples.
+
+All generators are chunked numpy on the host (the data plane feeds devices),
+keys are uint32.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def _fresh_ids(n: int, rng: np.random.Generator) -> np.ndarray:
+    """n unique uint32 ids (random bijection slice)."""
+    # sample without replacement from 2^32 via rejection on a 2x pool
+    pool = rng.integers(0, 2 ** 32, size=int(n * 1.3) + 16, dtype=np.uint64)
+    uniq = np.unique(pool)
+    while uniq.size < n:
+        extra = rng.integers(0, 2 ** 32, size=n, dtype=np.uint64)
+        uniq = np.unique(np.concatenate([uniq, extra]))
+    out = uniq[rng.permutation(uniq.size)[:n]]
+    return out.astype(np.uint32)
+
+
+def controlled_distinct_stream(n: int, distinct_frac: float, seed: int = 0
+                               ) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (keys (n,) uint32, truth_dup (n,) bool) with exactly
+    round(n*distinct_frac) distinct elements (first element always new)."""
+    rng = np.random.default_rng(seed)
+    d = max(1, int(round(n * distinct_frac)))
+    new_mask = np.zeros(n, dtype=bool)
+    pos = rng.choice(n - 1, size=d - 1, replace=False) + 1 if d > 1 else []
+    new_mask[0] = True
+    new_mask[pos] = True
+    fresh = _fresh_ids(d, rng)
+    new_count = np.cumsum(new_mask)                 # distinct seen so far
+    keys = np.empty(n, dtype=np.uint32)
+    keys[new_mask] = fresh
+    dup_pos = ~new_mask
+    # duplicates re-draw uniformly from the prefix of already-emitted ids
+    draw = (rng.random(dup_pos.sum()) * new_count[dup_pos]).astype(np.int64)
+    keys[dup_pos] = fresh[draw]
+    return keys, ~new_mask
+
+
+def zipf_stream(n: int, universe: int, a: float = 1.3, seed: int = 0
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Skewed stream: key ranks ~ Zipf(a) clipped to the universe."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.zipf(a, size=n)
+    ranks = np.minimum(ranks, universe) - 1
+    # map rank -> pseudo-random id so hot keys aren't numerically adjacent
+    keys = ((ranks.astype(np.uint64) * 0x9E3779B9) & 0xFFFFFFFF).astype(
+        np.uint32)
+    _, first = np.unique(keys, return_index=True)
+    truth = np.ones(n, bool)
+    truth[first] = False
+    return keys, truth
+
+
+def clickstream(n: int, n_users: int = 10_000, n_items: int = 50_000,
+                fraud_frac: float = 0.05, burst: int = 20, seed: int = 0):
+    """Click records (user, item) with fraudulent duplicate bursts.
+
+    -> dict of arrays {user, item, key} + truth_dup. A fraud burst repeats
+    one (user, item) click ``burst`` times — the paper's §1 detection target.
+    """
+    rng = np.random.default_rng(seed)
+    n_bursts = max(1, int(n * fraud_frac / burst))
+    n_organic = n - n_bursts * burst
+    users = rng.integers(0, n_users, size=n_organic).astype(np.uint32)
+    items = (np.minimum(rng.zipf(1.2, size=n_organic), n_items) - 1
+             ).astype(np.uint32)
+    # interleave fraud bursts
+    bu = rng.integers(0, n_users, size=n_bursts).astype(np.uint32)
+    bi = rng.integers(0, n_items, size=n_bursts).astype(np.uint32)
+    users = np.concatenate([users] + [np.full(burst, u, np.uint32) for u in bu])
+    items = np.concatenate([items] + [np.full(burst, i, np.uint32) for i in bi])
+    perm = rng.permutation(users.size)
+    users, items = users[perm], items[perm]
+    key = ((users.astype(np.uint64) << 17) ^ items.astype(np.uint64))
+    key = ((key * 0x9E3779B97F4A7C15) >> 32).astype(np.uint32)
+    _, first = np.unique(key, return_index=True)
+    truth = np.ones(users.size, bool)
+    truth[first] = False
+    return {"user": users, "item": items, "key": key}, truth
+
+
+def batched(keys: np.ndarray, batch: int) -> Iterator[np.ndarray]:
+    for i in range(0, len(keys), batch):
+        yield keys[i:i + batch]

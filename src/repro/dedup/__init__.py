@@ -1,0 +1,10 @@
+"""Distributed / pipelined de-duplication services built on repro.core."""
+
+from .sharded import ShardedDedup, ShardedDedupConfig
+from .pipeline import DedupPipeline, DedupBatch, unique_gather
+from .metrics import StreamMetrics, truth_from_stream
+
+__all__ = [
+    "ShardedDedup", "ShardedDedupConfig", "DedupPipeline", "DedupBatch",
+    "unique_gather", "StreamMetrics", "truth_from_stream",
+]

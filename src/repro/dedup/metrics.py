@@ -1,0 +1,93 @@
+"""Stream-quality metrics: FPR / FNR / load / convergence / throughput.
+
+Mirrors the paper's evaluation (Section 6): FPR and FNR against ground truth,
+and *stability* — "load [...] the number of 1's in the Bloom Filters
+normalized by the total memory space in bits" (Section 6.2, Fig. 11), with
+convergence declared when the load's moving range flattens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StreamMetrics:
+    """Host-side accumulator; feed per-batch reports."""
+
+    n: int = 0
+    true_distinct: int = 0
+    true_duplicate: int = 0
+    false_pos: int = 0
+    false_neg: int = 0
+    overflow: int = 0
+    _t0: float = dataclasses.field(default_factory=time.perf_counter)
+    load_history: list = dataclasses.field(default_factory=list)
+
+    def update(self, reported_dup: np.ndarray, truth_dup: Optional[np.ndarray],
+               load: Optional[np.ndarray] = None, s_bits: Optional[int] = None,
+               overflow: int = 0) -> None:
+        reported_dup = np.asarray(reported_dup)
+        self.n += int(reported_dup.size)
+        self.overflow += int(overflow)
+        if truth_dup is not None:
+            truth_dup = np.asarray(truth_dup)
+            self.true_distinct += int((~truth_dup).sum())
+            self.true_duplicate += int(truth_dup.sum())
+            self.false_pos += int((reported_dup & ~truth_dup).sum())
+            self.false_neg += int((~reported_dup & truth_dup).sum())
+        if load is not None and s_bits:
+            self.load_history.append(float(np.sum(load)) / float(s_bits))
+
+    # -- the paper's headline numbers ---------------------------------- //
+    @property
+    def fpr(self) -> float:
+        return self.false_pos / max(1, self.true_distinct)
+
+    @property
+    def fnr(self) -> float:
+        return self.false_neg / max(1, self.true_duplicate)
+
+    @property
+    def throughput(self) -> float:
+        return self.n / max(1e-9, time.perf_counter() - self._t0)
+
+    def converged(self, window: int = 16, tol: float = 5e-3) -> bool:
+        """Stability per Fig. 11: the normalized load's recent range < tol."""
+        h = self.load_history
+        if len(h) < window:
+            return False
+        recent = h[-window:]
+        return (max(recent) - min(recent)) < tol
+
+    def convergence_point(self, window: int = 16, tol: float = 5e-3
+                          ) -> Optional[int]:
+        """Index (in batches) where the load first stabilizes."""
+        h = self.load_history
+        for i in range(window, len(h) + 1):
+            r = h[i - window:i]
+            if max(r) - min(r) < tol:
+                return i - window
+        return None
+
+    def summary(self) -> dict:
+        return {
+            "n": self.n, "fpr": self.fpr, "fnr": self.fnr,
+            "overflow": self.overflow,
+            "throughput_eps": self.throughput,
+            "final_load": self.load_history[-1] if self.load_history else None,
+            "convergence_batch": self.convergence_point(),
+        }
+
+
+def truth_from_stream(keys: np.ndarray) -> np.ndarray:
+    """Exact ground truth: True where the key occurred earlier in the stream."""
+    keys = np.asarray(keys)
+    _, first_idx = np.unique(keys, return_index=True)
+    truth = np.ones(keys.shape[0], dtype=bool)
+    truth[first_idx] = False
+    return truth

@@ -1,0 +1,113 @@
+"""DedupPipeline — the paper's technique as a first-class data-pipeline stage.
+
+Wraps any record stream and yields (batch, keep_mask / loss_weights):
+
+    pipe = DedupPipeline(cfg, mode="drop")          # or "downweight"
+    for batch in pipe(stream_of_batches):
+        loss = train_step(params, batch.data, weights=batch.weights)
+
+Three deployment patterns, matching the paper's motivating applications
+(Section 1):
+
+  * training-corpus dedup (CDR / web-crawl): ``mode="drop"`` zeroes duplicate
+    records' loss weights so the optimizer never sees them twice;
+  * click-fraud filtering: ``mode="flag"`` passes everything through with the
+    duplicate mask attached for the downstream billing/serving logic;
+  * embedding-gather dedup (beyond-paper, recsys): `unique_gather` uses the
+    intra-batch matcher to collapse repeated embedding IDs ahead of the HBM
+    gather (see repro.models.recsys).
+
+Keys are derived from records by hashing whatever field tuple identifies a
+record (``key_fn``), defaulting to the raw uint32 record id.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Iterator, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.config import DedupConfig
+from ..core.engine import Dedup
+from ..core.state import FilterState
+from .metrics import StreamMetrics
+
+
+class DedupBatch(NamedTuple):
+    data: dict                 # the original record batch (arbitrary arrays)
+    keys: jnp.ndarray          # (B,) uint32 record keys
+    dup: jnp.ndarray           # (B,) bool — reported duplicate
+    weights: jnp.ndarray       # (B,) float32 — loss/serve weights
+
+
+@dataclasses.dataclass
+class DedupPipeline:
+    cfg: DedupConfig
+    mode: str = "drop"                         # drop | downweight | flag
+    duplicate_weight: float = 0.0              # used by "downweight"
+    key_fn: Optional[Callable[[dict], jnp.ndarray]] = None
+    track_metrics: bool = True
+
+    def __post_init__(self):
+        if self.mode not in ("drop", "downweight", "flag"):
+            raise ValueError(self.mode)
+        self.engine = Dedup(self.cfg)
+        self.state: FilterState = self.engine.init()
+        self.metrics = StreamMetrics()
+
+    # ------------------------------------------------------------------ //
+    def _keys(self, batch: dict) -> jnp.ndarray:
+        if self.key_fn is not None:
+            return self.key_fn(batch).astype(jnp.uint32)
+        if "key" in batch:
+            return batch["key"].astype(jnp.uint32)
+        raise KeyError("batch has no 'key' field and no key_fn was given")
+
+    def process(self, batch: dict, truth_dup: Optional[np.ndarray] = None
+                ) -> DedupBatch:
+        keys = self._keys(batch)
+        self.state, res = self.engine.process(self.state, keys)
+        dup = res.dup
+        if self.mode == "flag":
+            w = jnp.ones(keys.shape, jnp.float32)
+        else:
+            dup_w = 0.0 if self.mode == "drop" else self.duplicate_weight
+            w = jnp.where(dup, jnp.float32(dup_w), jnp.float32(1.0))
+        if self.track_metrics:
+            self.metrics.update(
+                np.asarray(dup), truth_dup,
+                load=np.asarray(self.state.load), s_bits=self.cfg.s * self.cfg.k)
+        return DedupBatch(data=batch, keys=keys, dup=dup, weights=w)
+
+    def __call__(self, stream: Iterable[dict]) -> Iterator[DedupBatch]:
+        for batch in stream:
+            yield self.process(batch)
+
+    # -- checkpointable state (stream position matters for RSBF!) ------ //
+    def state_dict(self) -> dict:
+        return {"filter_state": self.state}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state = d["filter_state"]
+
+
+def unique_gather(ids: jnp.ndarray):
+    """Collapse duplicate ids ahead of an expensive gather (beyond-paper,
+    DESIGN.md §5): returns (unique_padded_ids, inverse) s.t.
+    ``table[unique][inverse] == table[ids]`` but the gather touches each row
+    once. Fixed shapes: unique list is padded with id 0.
+    """
+    flat = ids.reshape(-1)
+    n = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)
+    sorted_ids = flat[order]
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+    # position of each sorted element's representative among the uniques
+    uniq_rank = jnp.cumsum(is_first) - 1                      # (n,)
+    uniq_ids = jnp.zeros((n,), flat.dtype).at[uniq_rank].set(sorted_ids)
+    inverse = jnp.zeros((n,), jnp.int32).at[order].set(
+        uniq_rank.astype(jnp.int32))
+    return uniq_ids, inverse.reshape(ids.shape)

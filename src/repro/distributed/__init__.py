@@ -1,0 +1,5 @@
+"""Distribution: sharding rules, collective utilities."""
+
+from . import collectives, sharding
+
+__all__ = ["collectives", "sharding"]

@@ -1,0 +1,216 @@
+"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs.
+
+Mesh: (pod, data, model) multi-pod or (data, model) single-pod. The batch
+shards over ("pod","data"); tensor-parallel dims over "model"; FSDP (when
+enabled) additionally shards d_model dims over "data".
+
+Divisibility-aware: every rule is a *preference chain* — e.g. GQA KV heads
+shard over "model" when n_kv % model == 0 (codeqwen's 32 KV heads), otherwise
+the head_dim shards instead (qwen3/mixtral's 8 KV heads on a 16-wide model
+axis), otherwise replicate. MoE experts shard over "model" when divisible
+(deepseek's 160), else the expert FFN dim shards (mixtral's 8 experts -> TP
+inside experts). The same logic picks KV-cache specs for serving.
+
+Everything here is pure metadata — specs are built from ``jax.eval_shape``
+trees, never from live arrays, so the 236B config costs nothing to plan.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([axis_size(mesh, n) for n in name]))
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1
+
+
+def _pick(mesh: Mesh, dim: int, prefs: Sequence):
+    """First mesh axis (or axis tuple) in prefs that divides dim; None if
+    nothing fits."""
+    for a in prefs:
+        if a is None:
+            return None
+        if dim % axis_size(mesh, a) == 0 and axis_size(mesh, a) > 1:
+            return a
+    return None
+
+
+# --------------------------------------------------------- transformer --- //
+
+def transformer_param_specs(cfg, mesh: Mesh, params_shape, fsdp: bool = False):
+    """Spec tree matching ``jax.eval_shape(init, ...)``'s structure."""
+    model = "model"
+    fsdp_axis = "data" if fsdp else None
+
+    def leaf_spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        # detect stacked-layer leading dim: inside "layers" subtree
+        stacked = any(getattr(p, "key", None) == "layers" for p in path)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = _param_spec(name, shape, path)
+        if stacked:
+            spec = (None, *spec)
+        return P(*spec)
+
+    def _dim(shape, i):
+        return shape[i] if i < len(shape) else 1
+
+    def _param_spec(name, shape, path):
+        d_spec = _pick(mesh, _dim(shape, 0), [fsdp_axis])  # d_model dims
+        if name in ("embed",):
+            return (_pick(mesh, shape[0], [model]), _pick(mesh, shape[1], [fsdp_axis]))
+        if name in ("lm_head",):
+            return (_pick(mesh, shape[0], [fsdp_axis]), _pick(mesh, shape[1], [model]))
+        if name in ("wq",) and len(shape) == 3:
+            return (d_spec, _pick(mesh, shape[1], [model]), None)
+        if name in ("wk", "wv"):
+            kv = _pick(mesh, shape[1], [model])
+            if kv is None:  # shard head_dim instead
+                return (d_spec, None, _pick(mesh, shape[2], [model]))
+            return (d_spec, kv, None)
+        if name == "wo":
+            if len(shape) == 3:
+                return (_pick(mesh, shape[0], [model]), None, d_spec)
+            return (_pick(mesh, shape[0], [model]), d_spec)
+        if name in ("wq_a", "wkv_a"):
+            return (d_spec, None)
+        if name in ("wq_b", "wkv_b"):
+            return (None, _pick(mesh, shape[1], [model]), None)
+        if name in ("w_gate", "w_up", "w_down"):
+            if len(shape) == 3:  # MoE expert-stacked (E, d, f) / (E, f, d)
+                e = _pick(mesh, shape[0], [model])
+                if e is not None:
+                    return (e, _pick(mesh, shape[1], [fsdp_axis]), None)
+                # experts not divisible -> TP inside the expert FFN dim
+                ff_dim = 2 if name in ("w_gate", "w_up") else 1
+                spec = [None, None, None]
+                spec[ff_dim] = _pick(mesh, shape[ff_dim], [model])
+                return tuple(spec)
+            if name in ("w_gate", "w_up"):
+                return (d_spec, _pick(mesh, shape[1], [model]))
+            return (_pick(mesh, shape[0], [model]), d_spec)
+        if name == "router":
+            return tuple(None for _ in shape)
+        # norms, biases, everything small: replicate
+        return tuple(None for _ in shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def transformer_batch_specs(mesh: Mesh):
+    b = batch_axes(mesh)
+    return {"tokens": P(b, None), "weights": P(b)}
+
+
+def transformer_cache_specs(cfg, mesh: Mesh, cache_shape):
+    """KV-cache specs for decode: batch over data axes; KV heads or head_dim
+    (GQA) / latent dim (MLA) over model."""
+    b = batch_axes(mesh)
+
+    def leaf(path, leaf_sd):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf_sd.shape
+        if name in ("k", "v"):          # (L, B, S, Kv, hd)
+            kv = _pick(mesh, shape[3], ["model"])
+            if kv is not None:
+                return P(None, b, None, kv, None)
+            # Kv < model axis: sequence-parallel cache beats head_dim
+            # sharding by ~600x on decode collectives (EXPERIMENTS.md §Perf
+            # D0->D1: head_dim sharding makes every attention step all-gather
+            # the cache); head_dim kept as the final fallback.
+            seq = _pick(mesh, shape[2], ["model"])
+            if seq is not None:
+                return P(None, b, seq, None, None)
+            return P(None, b, None, None, _pick(mesh, shape[4], ["model"]))
+        if name in ("ckv", "kpe"):      # (L, B, S, c)
+            # sequence-sharded latent cache: §Perf B2 (45 GB/step of cache
+            # re-gathering -> psum-only attention); latent-dim as fallback
+            seq = _pick(mesh, shape[2], ["model"])
+            if seq is not None:
+                return P(None, b, seq, None)
+            return P(None, b, None, _pick(mesh, shape[3], ["model"]))
+        if name == "kpos":
+            return P(None, b, None)
+        return P(*(None for _ in shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+# ----------------------------------------------------------------- gnn --- //
+
+def gnn_param_specs(mesh: Mesh, params_shape):
+    """MeshGraphNet params are ~1M — replicate everything."""
+    return jax.tree.map(lambda leaf: P(*(None for _ in leaf.shape)),
+                        params_shape)
+
+
+def gnn_batch_specs(mesh: Mesh, shard_graph_over_model: bool = False):
+    """Nodes/edges shard over the batch axes (full-batch cells additionally
+    spread over "model" — graph partitioning by index range)."""
+    axes = batch_axes(mesh)
+    if shard_graph_over_model:
+        axes = axes + ("model",)
+    return {
+        "nodes": P(axes, None), "edges": P(axes, None),
+        "src": P(axes), "dst": P(axes),
+        "edge_mask": P(axes), "node_mask": P(axes),
+        "targets": P(axes, None),
+    }
+
+
+# -------------------------------------------------------------- recsys --- //
+
+def recsys_param_specs(mesh: Mesh, params_shape):
+    """Embedding tables row-shard over "model"; small dense towers replicate."""
+    def leaf_spec(path, leaf):
+        name_parts = [getattr(p, "key", "") for p in path]
+        joined = "/".join(str(x) for x in name_parts)
+        if "table_" in joined or "wide" in joined:
+            row = _pick(mesh, leaf.shape[0], ["model"])
+            return P(row, *(None for _ in leaf.shape[1:]))
+        return P(*(None for _ in leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def recsys_batch_specs(mesh: Mesh, retrieval: bool = False):
+    b = batch_axes(mesh)
+    specs = {"dense": P(b, None), "sparse_ids": P(b, None), "labels": P(b)}
+    if retrieval:
+        # 1 query replicated; 1M candidates shard over the batch axes
+        # (1e6 is not divisible by 256/512; 16/32-way splits evenly)
+        specs = {"dense": P(), "sparse_ids": P(),
+                 "candidates": P(b, None)}
+    return specs
+
+
+# ---------------------------------------------------------- optimizer ---- //
+
+def zero_shard_spec(param_spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: shard optimizer moments over "data" on the first dim the param
+    spec leaves unsharded (and that divides). Falls back to the param spec."""
+    data = "data"
+    if data not in mesh.axis_names or axis_size(mesh, data) == 1:
+        return param_spec
+
+    def _uses_data(e):
+        return e == data or (isinstance(e, tuple) and data in e)
+
+    if any(_uses_data(e) for e in param_spec):   # FSDP already on "data"
+        return param_spec
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % axis_size(mesh, data) == 0 and dim > 1:
+            entries[i] = data
+            return P(*entries)
+    return param_spec

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the dedup hot path.
+
+hashmix       — fused k-way murmur hashing (VPU elementwise)
+bloom_probe   — packed-filter gather + bit test, filter row VMEM-resident
+scatter_delta — compare-broadcast packed bit scatter (OR / AND-NOT deltas)
+
+``ops`` holds the jitted wrappers (interpret=True off-TPU), ``ref`` the
+pure-jnp oracles the tests sweep against.
+"""
+
+from . import ops, ref
+from .hashmix import hashmix
+from .bloom_probe import bloom_probe
+from .scatter_delta import scatter_delta
+
+__all__ = ["ops", "ref", "hashmix", "bloom_probe", "scatter_delta"]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: packed Bloom-filter probe (gather + bit test + AND).
+
+words (k, W) uint32, word_idx (B, k) int32, bit_mask (B, k) uint32
+    -> hits (B, k) uint8   (and ops.py reduces to dup = all-k AND)
+
+This is the memory-irregular half of the dedup hot path: for each element we
+gather one 32-bit word per filter and test one bit (the paper's "checking
+whether these k bit positions are set", Section 3).
+
+Tiling strategy (the TPU adaptation, DESIGN.md §3.2):
+  * the filter row for hash f stays VMEM-resident for the whole batch sweep —
+    grid is (k, B/TB) with the words BlockSpec pinned to row f and *not*
+    revolving over the batch dimension, so each row is DMA'd from HBM once
+    per k*B probes instead of once per probe;
+  * gathers then hit VMEM, not HBM. Row budget: W*4 bytes <= 8 MiB
+    (W <= 2^21 words = 64 Mbit per filter). Larger filters shard over devices
+    first (repro.dedup.sharded) — at the paper's 512 MB / k=2 setting and 256
+    chips, each row is 1 MiB. Checked in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_B = 2048
+VMEM_ROW_BYTES_LIMIT = 8 * 1024 * 1024
+
+
+def _kernel(words_ref, widx_ref, mask_ref, hit_ref):
+    row = words_ref[0, :]                                   # (W,) this filter's row
+    idx = widx_ref[:, 0]                                    # (TB,)
+    mask = mask_ref[:, 0]
+    got = row[idx]                                          # VMEM vector gather
+    hit_ref[:, 0] = ((got & mask) != 0).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def bloom_probe(words: jnp.ndarray, word_idx: jnp.ndarray, bit_mask: jnp.ndarray,
+                *, tile_b: int = DEFAULT_TILE_B, interpret: bool = True
+                ) -> jnp.ndarray:
+    """-> hits (B, k) uint8."""
+    k, W = words.shape
+    b = word_idx.shape[0]
+    tile_b = min(tile_b, max(8, b))
+    pad = (-b) % tile_b
+    widx_p = jnp.pad(word_idx, ((0, pad), (0, 0)))          # pad gathers word 0 — harmless
+    mask_p = jnp.pad(bit_mask, ((0, pad), (0, 0)))
+    bp = widx_p.shape[0]
+
+    hits = pl.pallas_call(
+        _kernel,
+        grid=(k, bp // tile_b),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda f, i: (f, 0)),       # row f resident
+            pl.BlockSpec((tile_b, 1), lambda f, i: (i, f)),
+            pl.BlockSpec((tile_b, 1), lambda f, i: (i, f)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, 1), lambda f, i: (i, f)),
+        out_shape=jax.ShapeDtypeStruct((bp, k), jnp.uint8),
+        interpret=interpret,
+    )(words, widx_p, mask_p)
+    return hits[:b]

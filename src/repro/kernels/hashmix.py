@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused k-way murmur-mix hashing.
+
+keys (B,) uint32  ->  positions (B, k) int32 in [0, s)
+
+Pure VPU work (xor/shift/mul on uint32 lanes), no memory irregularity: this is
+the easiest third of the dedup hot path and fuses the k hash evaluations the
+paper performs per element (Section 3: "hashed to one of the s bits in each of
+the k Bloom Filters") into one pass over the batch.
+
+Tiling: grid over batch tiles of TB=2048 (8 sublane rows of 256 lanes at
+uint32); k (<=5) rides the minor dimension. VMEM per step:
+TB*4 (keys) + TB*k*4 (out) <= 48 KiB — far under budget, so the kernel is
+trivially compute-bound, which is the point: probing, not hashing, should pay
+the memory bill.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_B = 2048
+
+
+def _kernel(keys_ref, seeds_ref, pos_ref, *, s: int):
+    keys = keys_ref[...]                                   # (TB,)
+    seeds = seeds_ref[...]                                 # (k,)
+    x = keys[:, None] ^ seeds[None, :]                     # (TB, k)
+    x = x ^ (x >> 16)
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    if s & (s - 1) == 0:
+        pos = x & np.uint32(s - 1)
+    else:
+        pos = x % np.uint32(s)
+    pos_ref[...] = pos.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "tile_b", "interpret"))
+def hashmix(keys: jnp.ndarray, seeds: jnp.ndarray, *, s: int,
+            tile_b: int = DEFAULT_TILE_B, interpret: bool = True) -> jnp.ndarray:
+    """Positions (B, k) int32. B is padded to a tile multiple internally."""
+    b = keys.shape[0]
+    k = seeds.shape[0]
+    tile_b = min(tile_b, max(8, b))
+    pad = (-b) % tile_b
+    keys_p = jnp.pad(keys.astype(jnp.uint32), (0, pad))
+    bp = keys_p.shape[0]
+    seeds_c = jnp.asarray(seeds, dtype=jnp.uint32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, s=s),
+        grid=(bp // tile_b,),
+        in_specs=[
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, k), jnp.int32),
+        interpret=interpret,
+    )(keys_p, seeds_c)
+    return out[:b]

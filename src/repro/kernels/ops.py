@@ -1,0 +1,72 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Selects interpret mode automatically (CPU container -> interpret=True; on a
+real TPU backend the kernels compile natively) and enforces the VMEM sizing
+contracts documented in each kernel. ``fused_probe`` chains
+hashmix -> split -> bloom_probe -> AND-reduce: the full "report
+duplicate/distinct" decision of the paper's Algorithms 1-4 in two kernel
+launches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import bloom_probe as _probe_mod
+from . import hashmix as _hash_mod
+from . import scatter_delta as _scatter_mod
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hash_positions(keys: jnp.ndarray, seeds: jnp.ndarray, s: int) -> jnp.ndarray:
+    """(B,) keys -> (B, k) int32 positions (Pallas hashmix kernel)."""
+    return _hash_mod.hashmix(keys, seeds, s=s, interpret=_interpret())
+
+
+def probe(words: jnp.ndarray, word_idx: jnp.ndarray, bit_mask: jnp.ndarray
+          ) -> jnp.ndarray:
+    """(k, W) packed filter + (B, k) probes -> (B, k) uint8 hits."""
+    k, W = words.shape
+    if W * 4 > _probe_mod.VMEM_ROW_BYTES_LIMIT:
+        raise ValueError(
+            f"filter row {W * 4} B exceeds the {_probe_mod.VMEM_ROW_BYTES_LIMIT} B "
+            f"VMEM budget — shard the filter (repro.dedup.sharded) first")
+    return _probe_mod.bloom_probe(words, word_idx, bit_mask,
+                                  interpret=_interpret())
+
+
+def fused_probe(keys: jnp.ndarray, words: jnp.ndarray, seeds: jnp.ndarray,
+                s: int):
+    """keys (B,) -> (dup (B,) bool, hits (B,k) uint8, pos (B,k) int32)."""
+    pos = hash_positions(keys, seeds, s)
+    w_idx = (pos // 32).astype(jnp.int32)
+    mask = (jnp.uint32(1) << (pos % 32).astype(jnp.uint32)).astype(jnp.uint32)
+    hits = probe(words, w_idx, mask)
+    return jnp.all(hits == 1, axis=1), hits, pos
+
+
+def scatter_or(words: jnp.ndarray, word_idx: jnp.ndarray, bit_mask: jnp.ndarray,
+               tile_w: int | None = None) -> jnp.ndarray:
+    """Set bits via the compare-scatter kernel. Disabled lanes: word_idx=-1."""
+    k, W = words.shape
+    kw = {} if tile_w is None else {"tile_w": tile_w}
+    delta = _scatter_mod.scatter_delta(word_idx, bit_mask, w=W,
+                                       interpret=_interpret(), **kw)
+    return words | delta
+
+
+def scatter_andnot(words: jnp.ndarray, word_idx: jnp.ndarray,
+                   bit_mask: jnp.ndarray, tile_w: int | None = None
+                   ) -> jnp.ndarray:
+    """Clear bits via the compare-scatter kernel."""
+    k, W = words.shape
+    kw = {} if tile_w is None else {"tile_w": tile_w}
+    delta = _scatter_mod.scatter_delta(word_idx, bit_mask, w=W,
+                                       interpret=_interpret(), **kw)
+    return words & ~delta

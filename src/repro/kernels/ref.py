@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each ``ref_*`` implements the identical contract with plain jax.numpy —
+no Pallas, no tiling — and is what tests/test_kernels.py sweeps the kernels
+against (shapes × dtypes × filter sizes, interpret=True).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_M1 = jnp.uint32(0x85EBCA6B)
+_M2 = jnp.uint32(0xC2B2AE35)
+
+
+def ref_hashmix(keys: jnp.ndarray, seeds: jnp.ndarray, *, s: int) -> jnp.ndarray:
+    x = keys.astype(jnp.uint32)[:, None] ^ seeds[None, :].astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 13)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    if s & (s - 1) == 0:
+        pos = x & jnp.uint32(s - 1)
+    else:
+        pos = x % jnp.uint32(s)
+    return pos.astype(jnp.int32)
+
+
+def ref_bloom_probe(words: jnp.ndarray, word_idx: jnp.ndarray,
+                    bit_mask: jnp.ndarray) -> jnp.ndarray:
+    k = words.shape[0]
+    rows = jnp.arange(k, dtype=jnp.int32)[None, :]
+    got = words[rows, word_idx]
+    return ((got & bit_mask) != 0).astype(jnp.uint8)
+
+
+def ref_scatter_delta(word_idx: jnp.ndarray, bit_mask: jnp.ndarray, *, w: int
+                      ) -> jnp.ndarray:
+    """One-hot per-bit max accumulation (== OR) — independent of the kernel's
+    compare-broadcast strategy."""
+    b, k = word_idx.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((bit_mask[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.uint8)
+    out = []
+    for f in range(k):
+        acc = jnp.zeros((w, 32), jnp.uint8).at[word_idx[:, f]].max(
+            bits[:, f, :], mode="drop")
+        weights = (jnp.uint32(1) << shifts).astype(jnp.uint32)
+        out.append((acc.astype(jnp.uint32) * weights).sum(-1, dtype=jnp.uint32))
+    return jnp.stack(out)

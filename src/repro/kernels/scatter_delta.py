@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: compare-based packed bit-scatter (OR / AND-NOT deltas).
+
+word_idx (B, k) int32, bit_mask (B, k) uint32, W
+    -> delta (k, W) uint32     (caller applies words|delta or words&~delta)
+
+TPUs have no efficient random scatter, so the batched update (the paper's
+"set the bits in H / reset the chosen bits") is rebuilt as dense compare
+work: for each word-tile, broadcast-compare every element's word index
+against the tile's iota and tree-OR the single-bit masks. O(B * W) VPU ops
+traded for perfectly regular memory — profitable when either
+
+  * the filter is *blocked* (DESIGN.md §3.3): each element's bits land in one
+    VMEM-tile-sized block, so only B * TW comparisons are needed, or
+  * W per shard is small because the filter is sharded across many devices
+    (the production regime: 512 MB / 256 chips / k=2 -> W = 2^16 per row).
+
+The tree-OR over the batch axis exploits that per-element masks are
+single-bit: OR is implemented as log2(B) vector | steps — no integer-max
+trickery, no (B, TW, 32) blow-up.
+
+VMEM per grid step: B*8 (idx+mask) + B*TW*4 transient + TW*4 out. With
+B=1024, TW=512: ~2.1 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_W = 512
+MAX_BATCH = 4096
+
+
+def _kernel(widx_ref, mask_ref, delta_ref, *, tile_w: int):
+    t = pl.program_id(1)
+    base = t * tile_w
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, tile_w), 1) + base  # (1, TW)
+    widx = widx_ref[:, 0]                                   # (B,)
+    mask = mask_ref[:, 0]
+    eq = widx[:, None] == lane                               # (B, TW)
+    contrib = jnp.where(eq, mask[:, None], jnp.uint32(0))
+    # tree-OR over the (power-of-two padded) batch axis
+    x = contrib
+    while x.shape[0] > 1:
+        half = x.shape[0] // 2
+        x = x[:half] | x[half:]
+    delta_ref[0, :] = x[0]
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile_w", "interpret"))
+def scatter_delta(word_idx: jnp.ndarray, bit_mask: jnp.ndarray, *, w: int,
+                  tile_w: int = DEFAULT_TILE_W, interpret: bool = True
+                  ) -> jnp.ndarray:
+    """-> (k, W) uint32 OR-accumulated delta. Disabled lanes use word_idx >= W
+    (they never match a tile lane). B padded to a power of two."""
+    b, k = word_idx.shape
+    bp = 1 << max(3, (b - 1).bit_length())
+    widx_p = jnp.pad(word_idx, ((0, bp - b), (0, 0)), constant_values=-1)
+    mask_p = jnp.pad(bit_mask, ((0, bp - b), (0, 0)))
+    tile_w = min(tile_w, w)
+    if w % tile_w:
+        raise ValueError(f"W={w} must be a multiple of tile_w={tile_w}")
+
+    delta = pl.pallas_call(
+        functools.partial(_kernel, tile_w=tile_w),
+        grid=(k, w // tile_w),
+        in_specs=[
+            pl.BlockSpec((bp, 1), lambda f, t: (0, f)),
+            pl.BlockSpec((bp, 1), lambda f, t: (0, f)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_w), lambda f, t: (f, t)),
+        out_shape=jax.ShapeDtypeStruct((k, w), jnp.uint32),
+        interpret=interpret,
+    )(widx_p, mask_p)
+    return delta

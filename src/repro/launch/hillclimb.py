@@ -1,0 +1,443 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf hillclimbing driver: lower a cell under a config mutation, record
+the loop-aware roofline terms, and append the (hypothesis, change, before,
+after) record to experiments/perf_iterations.json.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --exp <name>
+
+Experiments are keyed to the three chosen cells (EXPERIMENTS.md §Perf):
+  A. dedup-stream ingest (paper-representative)    — packed layout, capacity,
+     incremental load
+  B. deepseek-v2 decode_32k (worst memory-bound)   — MLA absorb, cache layout
+  C. deepseek-v2 train_4k (MoE compute/collective) — dispatch strategy,
+     bf16 accumulation, microbatching
+plus a qwen3 decode cache-layout fix (SPMD involuntary-remat elimination).
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_arch                      # noqa: E402
+from repro.configs.registry import LMArch               # noqa: E402
+from repro.launch.analysis import analyze_compiled      # noqa: E402
+from repro.launch.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.optim import init_opt_state                  # noqa: E402
+
+OUT = "experiments/perf_iterations.json"
+
+
+def _ws(shape_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda sd, s: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, s)),
+        shape_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def terms(rec):
+    la = rec["loop_aware"]
+    return {
+        "flops": la["flops"],
+        "hbm_bytes": la["hbm_bytes_essential"],
+        "coll_bytes": la["collectives_bytes"].get("total", 0),
+        "compute_s": la["flops"] / PEAK_FLOPS_BF16,
+        "memory_s": la["hbm_bytes_essential"] / HBM_BW,
+        "collective_s": la["collectives_bytes"].get("total", 0) / ICI_BW,
+        "temp_bytes": rec["memory"].get("temp_size_in_bytes"),
+        "copies_bytes": la["essential_by_op"].get("copy", 0),
+    }
+
+
+def lower_lm_cell(arch: LMArch, shape: str, mesh):
+    cell = arch.shapes[shape]
+    params_shape = arch.params_shape()
+    pspecs = arch.param_specs(mesh)
+    inputs = arch.input_specs(shape)
+    bspecs = arch.batch_specs(shape, mesh)
+    step = arch.step(shape)
+    with jax.set_mesh(mesh):
+        if cell.kind == "train":
+            opt_shape = jax.eval_shape(
+                lambda: init_opt_state(arch.opt_config(), params_shape))
+            ospecs = arch.opt_specs(mesh)
+            fn = jax.jit(step, donate_argnums=(0, 1))
+            args = (_ws(params_shape, pspecs, mesh),
+                    _ws(opt_shape, ospecs, mesh),
+                    *_ws(inputs, bspecs, mesh).values())
+        elif cell.kind == "decode":
+            fn = jax.jit(step, donate_argnums=(1,))
+            i = _ws(inputs, bspecs, mesh)
+            args = (_ws(params_shape, pspecs, mesh), i["cache"], i["token"],
+                    i["pos"])
+        else:
+            fn = jax.jit(step)
+            args = (_ws(params_shape, pspecs, mesh),
+                    *_ws(inputs, bspecs, mesh).values())
+        t0 = time.perf_counter()
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        dt = time.perf_counter() - t0
+    rec = analyze_compiled(lowered, compiled)
+    rec["compile_s"] = round(dt, 1)
+    return rec
+
+
+def lm_variant(arch_id: str, shape: str, label: str, hypothesis: str,
+               mutate=None, accum=None):
+    base_arch = get_arch(arch_id)
+    cfg = base_arch.cfg if mutate is None else mutate(base_arch.cfg)
+    accum_map = dict(base_arch.accum)
+    if accum is not None:
+        accum_map[shape] = accum
+    arch = LMArch(arch_id, cfg, accum=accum_map)
+    mesh = make_production_mesh()
+    rec = lower_lm_cell(arch, shape, mesh)
+    return {"cell": f"{arch_id}/{shape}/single", "label": label,
+            "hypothesis": hypothesis, **terms(rec),
+            "compile_s": rec["compile_s"],
+            "collectives_counts": rec["loop_aware"]["collectives_counts"]}
+
+
+def dedup_variant(label: str, hypothesis: str, packed: bool,
+                  capacity_factor: float, memory_mb: int = 512,
+                  batch: int = 1 << 20):
+    from repro.core import DedupConfig
+    from repro.dedup import ShardedDedup, ShardedDedupConfig
+
+    mesh = make_production_mesh()
+    cfg = DedupConfig.for_variant(
+        "rlbsbf", memory_bits=memory_mb * 8 * 1024 * 1024, packed=packed)
+    scfg = ShardedDedupConfig(base=cfg, mesh_axes=tuple(mesh.axis_names),
+                              capacity_factor=capacity_factor)
+    sd = ShardedDedup(scfg, mesh)
+    step = sd.make_step(batch // sd.n_shards)
+    state_shape = jax.eval_shape(sd.init)
+    axes = tuple(mesh.axis_names)
+    state_specs = jax.tree.map(
+        lambda x: P(axes, *([None] * (x.ndim - 1))), state_shape)
+    keys_sds = jax.ShapeDtypeStruct((batch,), np.uint32,
+                                    sharding=NamedSharding(mesh, P(axes)))
+    with jax.set_mesh(mesh):
+        t0 = time.perf_counter()
+        lowered = step.lower(_ws(state_shape, state_specs, mesh), keys_sds)
+        compiled = lowered.compile()
+        dt = time.perf_counter() - t0
+    rec = analyze_compiled(lowered, compiled)
+    rec["compile_s"] = round(dt, 1)
+    return {"cell": "dedup-stream/ingest_1048576/single", "label": label,
+            "hypothesis": hypothesis, **terms(rec),
+            "compile_s": rec["compile_s"],
+            "collectives_counts": rec["loop_aware"]["collectives_counts"]}
+
+
+EXPERIMENTS = {}
+
+
+def exp(name):
+    def deco(fn):
+        EXPERIMENTS[name] = fn
+        return fn
+    return deco
+
+
+# ---------------- cell A: the paper's technique ------------------------- //
+
+@exp("dedup-baseline")
+def dedup_baseline():
+    return dedup_variant(
+        "A0-baseline-dense8-cap2",
+        "paper-faithful layout: one byte per bit, capacity factor 2.0",
+        packed=False, capacity_factor=2.0)
+
+
+@exp("dedup-packed")
+def dedup_packed():
+    return dedup_variant(
+        "A1-packed-uint32",
+        "32 bits/word packing cuts filter-state HBM traffic ~8-32x "
+        "(probe gathers words; scatter builds packed deltas)",
+        packed=True, capacity_factor=2.0)
+
+
+@exp("dedup-capacity")
+def dedup_capacity():
+    return dedup_variant(
+        "A2-packed-cap1.25",
+        "routing buffers (S,C) dominate all-to-all bytes; capacity 2.0 -> "
+        "1.25 cuts them 1.6x at <1e-4 overflow (Poisson tail at B/S=4096)",
+        packed=True, capacity_factor=1.25)
+
+
+# ---------------- cell B: deepseek decode (memory-bound) --------------- //
+
+@exp("mla-noabsorb")
+def mla_noabsorb():
+    return lm_variant(
+        "deepseek-v2-236b", "decode_32k", "B0-baseline-naive-mla",
+        "straightforward MLA decode re-materializes per-head K/V from the "
+        "latent over all 32k cached positions each step",
+        mutate=lambda c: dataclasses.replace(c, mla_absorb=False))
+
+
+@exp("mla-absorb")
+def mla_absorb():
+    return lm_variant(
+        "deepseek-v2-236b", "decode_32k", "B1-absorbed-mla",
+        "absorbing W_uk/W_uv into the query/output projections keeps "
+        "attention in the 576-dim latent: kills the S*H*(nope+v) "
+        "re-materialization flops AND its HBM traffic",
+        mutate=lambda c: dataclasses.replace(c, mla_absorb=True))
+
+
+@exp("mla-seqcache")
+def mla_seqcache():
+    from repro.distributed import sharding as shr
+    orig = shr.transformer_cache_specs
+
+    def seq_latent(cfg, mesh, cache_shape):
+        b = shr.batch_axes(mesh)
+
+        def leaf(path, leaf_sd):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            shape = leaf_sd.shape
+            if name in ("ckv", "kpe"):
+                return P(None, b, "model", None)
+            if name == "kpos":
+                return P(None, b, "model")
+            return P(*(None for _ in shape))
+
+        return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+    shr.transformer_cache_specs = seq_latent
+    try:
+        out = lm_variant(
+            "deepseek-v2-236b", "decode_32k", "B2-absorbed+seq-cache",
+            "after absorbing, the collective term is the latent-dim-sharded "
+            "cache being re-gathered per step; sequence-sharding the latent "
+            "cache keeps attention psum-only like the qwen3 D1 win",
+            mutate=lambda c: dataclasses.replace(c, mla_absorb=True))
+    finally:
+        shr.transformer_cache_specs = orig
+    return out
+
+
+# ---------------- cell C: deepseek train (MoE) -------------------------- //
+
+@exp("moe-einsum")
+def moe_einsum():
+    return lm_variant(
+        "deepseek-v2-236b", "train_4k", "C0-baseline-gshard-einsum",
+        "GShard dense dispatch (tokens,E,C) einsums — the faithful TPU-MoE "
+        "baseline; predicted to exceed expert flops at E=160 top-6",
+        mutate=lambda c: dataclasses.replace(c, moe_dispatch="einsum"))
+
+
+@exp("moe-sort")
+def moe_sort():
+    return lm_variant(
+        "deepseek-v2-236b", "train_4k", "C1-sort-dispatch",
+        "argsort token-copies by expert + grouped matmul: dispatch cost "
+        "O(T*k) data movement, independent of E -> compute term drops to "
+        "the true expert flops",
+        mutate=lambda c: dataclasses.replace(c, moe_dispatch="sort"))
+
+
+@exp("train-bf16accum")
+def train_bf16accum():
+    # accum buffer dtype is plumbed via the arch step; emulate by raising
+    # accum and switching dtype through a wrapper arch
+    import repro.train.steps as steps
+    orig = steps.make_train_step
+
+    def patched(loss_fn, opt_cfg, accum_steps=1, accum_dtype=None):
+        import jax.numpy as jnp
+        return orig(loss_fn, opt_cfg, accum_steps, accum_dtype=jnp.bfloat16)
+
+    steps.make_train_step = patched
+    try:
+        out = lm_variant(
+            "deepseek-v2-236b", "train_4k", "C2-sort+bf16-accum",
+            "fp32 grad-accum buffers are ~3.7GB/device x 2-3 live copies; "
+            "bf16 accumulation halves them (optimizer moments stay fp32)")
+    finally:
+        steps.make_train_step = orig
+    return out
+
+
+@exp("train-accum16")
+def train_accum16():
+    return lm_variant(
+        "deepseek-v2-236b", "train_4k", "C3-accum16",
+        "halving the microbatch (accum 8->16) halves activation "
+        "checkpoints + MoE transients; trades 2x more all-reduce rounds "
+        "of the same total gradient bytes",
+        accum=16)
+
+
+@exp("mixtral-einsum")
+def mixtral_einsum():
+    return lm_variant(
+        "mixtral-8x7b", "train_4k", "E0-mixtral-gshard-einsum",
+        "inverse prediction of C0/C1: at E=8 top-2 the GShard dispatch "
+        "einsums cost ~84 MFLOP/token vs 78 GFLOP/token of experts (0.1%) "
+        "— einsum dispatch should be FINE here",
+        mutate=lambda c: dataclasses.replace(c, moe_dispatch="einsum"))
+
+
+@exp("mixtral-sort")
+def mixtral_sort():
+    return lm_variant(
+        "mixtral-8x7b", "train_4k", "E1-mixtral-sort",
+        "sort dispatch should be ~neutral at E=8 (the crossover between "
+        "dispatch strategies is expert-count-driven, not a universal win)",
+        mutate=lambda c: dataclasses.replace(c, moe_dispatch="sort"))
+
+
+# ---------------- cell C': qwen3 train (most collective-bound) ---------- //
+
+@exp("qwen3-train-baseline")
+def qwen3_train_baseline():
+    return lm_variant(
+        "qwen3-8b", "train_4k", "C'0-baseline-hd-sharded-kv",
+        "kv=8 heads don't divide model=16, so wk/wv shard head_dim; every "
+        "flash kv-block then needs cross-shard reduction — thousands of "
+        "all-gathers/all-reduces per step inside the layer x accum loops")
+
+
+@exp("qwen3-train-kvrep")
+def qwen3_train_kvrep():
+    from repro.distributed import sharding as shr
+    orig = shr.transformer_param_specs
+
+    def kvrep_specs(cfg, mesh, params_shape, fsdp=False):
+        specs = orig(cfg, mesh, params_shape, fsdp=fsdp)
+
+        def fix(path, spec):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name in ("wk", "wv"):
+                return P(*(None for _ in spec))
+            return spec
+
+        return jax.tree_util.tree_map_with_path(
+            fix, specs, is_leaf=lambda x: isinstance(x, P))
+
+    shr.transformer_param_specs = kvrep_specs
+    try:
+        out = lm_variant(
+            "qwen3-8b", "train_4k", "C'1-replicated-kv+expand",
+            "Megatron GQA treatment: replicate the small wk/wv (16M params), "
+            "expand K/V to the 32 query heads pre-attention (no (Kv,G) "
+            "grouping reshape) — attention shards on H and goes "
+            "collective-free; costs 16x duplicated KV-proj flops "
+            "(~0.5% of layer flops)",
+            mutate=lambda c: dataclasses.replace(c, gqa_expand_kv=True))
+    finally:
+        shr.transformer_param_specs = orig
+    return out
+
+
+# ---------------- bonus: qwen3 decode cache layout ---------------------- //
+
+@exp("qwen3-decode-baseline")
+def qwen3_decode_baseline():
+    """Baseline = the pre-optimization head_dim-sharded cache (the rule that
+    was default before §Perf D promoted sequence sharding)."""
+    from repro.distributed import sharding as shr
+    orig = shr.transformer_cache_specs
+
+    def hd_sharded(cfg, mesh, cache_shape):
+        b = shr.batch_axes(mesh)
+
+        def leaf(path, leaf_sd):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            shape = leaf_sd.shape
+            if name in ("k", "v"):
+                return P(None, b, None, None, "model")
+            if name in ("ckv", "kpe"):
+                return P(None, b, None, "model")
+            if name == "kpos":
+                return P(None, b, None)
+            return P(*(None for _ in shape))
+
+        return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+    shr.transformer_cache_specs = hd_sharded
+    try:
+        out = lm_variant(
+            "qwen3-8b", "decode_32k", "D0-baseline-hd-sharded-cache",
+            "kv=8 < model=16 so the cache shards head_dim; SPMD reports "
+            "involuntary full remat (full-cache copies) at the attention "
+            "einsum")
+    finally:
+        shr.transformer_cache_specs = orig
+    return out
+
+
+@exp("qwen3-decode-seqshard")
+def qwen3_decode_seqshard():
+    from repro.distributed import sharding as shr
+    orig = shr.transformer_cache_specs
+
+    def seq_sharded(cfg, mesh, cache_shape):
+        b = shr.batch_axes(mesh)
+
+        def leaf(path, leaf_sd):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            shape = leaf_sd.shape
+            if name in ("k", "v"):
+                return P(None, b, "model", None, None)
+            if name in ("ckv", "kpe"):
+                return P(None, b, "model", None)
+            if name == "kpos":
+                return P(None, b, "model")
+            return P(*(None for _ in shape))
+
+        return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+    shr.transformer_cache_specs = seq_sharded
+    try:
+        out = lm_variant(
+            "qwen3-8b", "decode_32k", "D1-seq-sharded-cache",
+            "shard the cache on the sequence dim instead (2048 slots/dev): "
+            "attention becomes a psum over sequence shards and the "
+            "partitioner's full-cache remat copies disappear")
+    finally:
+        shr.transformer_cache_specs = orig
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", required=True,
+                    help=f"one of {sorted(EXPERIMENTS)} or 'all'")
+    args = ap.parse_args()
+    names = sorted(EXPERIMENTS) if args.exp == "all" else [args.exp]
+    results = []
+    if os.path.exists(OUT):
+        with open(OUT) as f:
+            results = json.load(f)
+    done = {r["label"] for r in results}
+    for name in names:
+        rec = EXPERIMENTS[name]()
+        results[:] = [r for r in results if r["label"] != rec["label"]]
+        results.append(rec)
+        print(f"[hillclimb] {rec['label']}: compute={rec['compute_s']:.4f}s "
+              f"memory={rec['memory_s']:.4f}s "
+              f"collective={rec['collective_s']:.4f}s "
+              f"temp={rec['temp_bytes']/1e9 if rec['temp_bytes'] else 0:.1f}GB")
+        with open(OUT, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants for the roofline model (assignment §Roofline)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link
+CHIP_HBM_BYTES = 16 * 1024**3
+VMEM_BYTES = 128 * 1024**2

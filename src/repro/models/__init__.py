@@ -1,0 +1,5 @@
+"""Model zoo: LM transformers (dense/MoE, GQA/MLA/SWA), MeshGraphNet, RecSys."""
+
+from . import gnn, layers, moe, recsys, transformer
+
+__all__ = ["gnn", "layers", "moe", "recsys", "transformer"]

@@ -1,0 +1,236 @@
+"""Shared neural-net layers (pure JAX, pytree params, no framework deps).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take a jax PRNG key and
+    return the pytree — all init fns are ``jax.eval_shape``-safe so the
+    dry-run can build 236B-param shape trees without allocating;
+  * compute dtype is configurable (bf16 default), reductions/softmax in fp32;
+  * every matmul is an einsum with named axes in the docstring so sharding
+    rules (distributed/sharding.py) can be written against them.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------- init -- //
+
+def normal_init(key, shape, dtype, stddev=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype):
+    """LeCun-normal on the penultimate axis (matmul contracting dim)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return normal_init(key, shape, dtype, stddev=1.0 / math.sqrt(fan_in))
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ----------------------------------------------------------------- norm -- //
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm in fp32, cast back to x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope -- //
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0
+               ) -> jnp.ndarray:
+    """x (..., S, H, D) with positions (..., S) — rotates pairs (even, odd)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention -- //
+
+def attention_scores_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                          window: Optional[int] = None) -> jnp.ndarray:
+    """(..., Sq, Sk) bool mask: causal, optionally sliding-window."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return m
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray,
+         scale: Optional[float] = None) -> jnp.ndarray:
+    """Grouped-query scaled dot-product attention (naive — materializes the
+    score matrix; use for short Sq, e.g. decode).
+
+    q (B, Sq, Kv, G, D), k (B, Sk, Kv, D), v (B, Sk, Kv, Dv), mask (B, Sq, Sk)
+    -> (B, Sq, Kv, G, Dv).   Kv = #kv heads, G = #query heads per kv head.
+    Softmax in fp32.
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out
+
+
+def flash_sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+               window: Optional[int] = None, scale: Optional[float] = None,
+               q_block: int = 1024, k_block: int = 1024) -> jnp.ndarray:
+    """Flash-style block-chunked attention: online softmax over KV blocks,
+    scan over Q blocks. Never materializes more than a
+    (B, Kv, G, q_block, k_block) tile — O(S) memory, which is what makes the
+    32k-prefill and 4k-train cells feasible (DESIGN.md §3).
+
+    q (B, Sq, Kv, G, D); k (B, Sk, Kv, D); v (B, Sk, Kv, Dv);
+    q_pos (B, Sq), k_pos (B, Sk) int32 (negative k_pos = invalid/padding).
+    Causal: attends where k_pos <= q_pos (and within ``window`` if given).
+    """
+    B, Sq, Kv, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    if Sq <= q_block and Sk <= k_block:
+        mask = attention_scores_mask(q_pos, k_pos, window) & (
+            k_pos >= 0)[:, None, :]
+        return sdpa(q, k, v, mask, scale=scale)
+
+    qb = min(q_block, Sq)
+    kb = min(k_block, Sk)
+    pad_q = (-Sq) % qb
+    pad_k = (-Sk) % kb
+    q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    q_pos_p = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=0)
+    k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    k_pos_p = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    nq, nk = (Sq + pad_q) // qb, (Sk + pad_k) // kb
+
+    kq = k.reshape(B, nk, kb, Kv, D)
+    vq = v.reshape(B, nk, kb, Kv, Dv)
+    kpb = k_pos_p.reshape(B, nk, kb)
+    neg = jnp.finfo(jnp.float32).min
+
+    def q_step(_, qxs):
+        qi, qpi = qxs                                 # (B,qb,Kv,G,D),(B,qb)
+
+        def kv_step(carry, kxs):
+            m, l, acc = carry
+            ki, vi, kpi = kxs                         # (B,kb,Kv,D),(B,kb,Kv,Dv)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, ki).astype(
+                jnp.float32) * scale
+            msk = (qpi[:, :, None] >= kpi[:, None, :]) & (kpi >= 0)[:, None, :]
+            if window is not None:
+                msk &= (qpi[:, :, None] - kpi[:, None, :]) < window
+            s = jnp.where(msk[:, None, None, :, :], s, neg)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vi.dtype), vi).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kv, G, qb), neg, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Kv, G, qb, Dv), jnp.float32)
+        kv_xs = (jnp.moveaxis(kq, 1, 0), jnp.moveaxis(vq, 1, 0),
+                 jnp.moveaxis(kpb, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), kv_xs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Kv,G,qb,Dv)
+        return None, jnp.moveaxis(out, 3, 1)          # (B,qb,Kv,G,Dv)
+
+    q_xs = (jnp.moveaxis(q.reshape(B, nq, qb, Kv, G, D), 1, 0),
+            jnp.moveaxis(q_pos_p.reshape(B, nq, qb), 1, 0))
+    _, outs = jax.lax.scan(q_step, None, q_xs)        # (nq, B, qb, Kv, G, Dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * qb, Kv, G, Dv)
+    return out[:, :Sq].astype(v.dtype)
+
+
+# ------------------------------------------------------------------ mlp -- //
+
+def mlp_init(key, dims, dtype, bias=True, name="mlp"):
+    """dims [d0, d1, ..., dn] — n linear layers."""
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+        p = {"w": fan_in_init(ks[i], (di, do), dtype)}
+        if bias:
+            p["b"] = jnp.zeros((do,), dtype)
+        layers.append(p)
+    return layers
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    n = len(layers)
+    for i, p in enumerate(layers):
+        x = x @ p["w"]
+        if "b" in p:
+            x = x + p["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def swiglu_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": fan_in_init(k1, (d_model, d_ff), dtype),   # einsum: d,df->f
+        "w_up": fan_in_init(k2, (d_model, d_ff), dtype),
+        "w_down": fan_in_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu_apply(p, x):
+    g = jax.nn.silu(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ------------------------------------------------- weighted cross entropy -- //
+
+def weighted_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                  weights: jnp.ndarray) -> jnp.ndarray:
+    """logits (..., V) fp-any, labels (...,) int32, weights (...,) — mean over
+    weighted tokens in fp32. Weights of 0 drop records (dedup 'drop' mode)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    w = weights.astype(jnp.float32)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two dispatch strategies, selected per config (DESIGN.md §Perf):
+
+  * ``einsum`` — GShard-style dense dispatch/combine tensors
+    (tokens, E, capacity). The classic TPU formulation: shards cleanly
+    (experts over "model" -> XLA all-to-all), but dispatch FLOPs scale with
+    E·C and overtake expert FLOPs for fine-grained MoE (DeepSeek's 160
+    experts). Kept as the faithful baseline.
+  * ``sort`` — argsort token-copies by expert, scatter into an (E, C, d)
+    buffer, grouped matmul, scatter-add back. Dispatch cost O(T·k·log) +
+    O(T·k·d) data movement, independent of E. The beyond-paper optimization
+    for fine-grained MoE; §Perf quantifies the delta from the lowered HLO.
+
+Routing: softmax router, top-k, renormalized combine weights (Mixtral-style);
+optional shared experts (DeepSeek-V2) always run densely.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import fan_in_init, swiglu_apply, swiglu_init
+
+
+class MoEConfig(NamedTuple):
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0          # 0 -> n_shared * d_ff_expert
+    capacity_factor: float = 1.25
+    dispatch: str = "einsum"      # einsum | sort
+    group_size: int = 0           # 0 = one group; else dispatch per token
+                                  # group (bounds the (g,E,C) tensors at scale)
+
+
+def moe_init(key, cfg: MoEConfig, dtype):
+    kr, ke, ks = jax.random.split(key, 3)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    params = {
+        "router": fan_in_init(kr, (d, E), jnp.float32),   # router in fp32
+        # stacked experts: einsum e,d,f -> expert dim shards over "model"
+        "w_gate": fan_in_init(ke, (E, d, f), dtype),
+        "w_up": fan_in_init(jax.random.fold_in(ke, 1), (E, d, f), dtype),
+        "w_down": fan_in_init(jax.random.fold_in(ke, 2), (E, f, d), dtype),
+    }
+    if cfg.n_shared:
+        fs = cfg.d_ff_shared or cfg.n_shared * cfg.d_ff_expert
+        params["shared"] = swiglu_init(ks, d, fs, dtype)
+    return params
+
+
+def _route(params, x, cfg: MoEConfig):
+    """x (T, d) -> top-k ids (T, k) int32, weights (T, k) fp32."""
+    logits = (x.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)                      # (T, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return ids.astype(jnp.int32), w
+
+
+def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(4, c)
+
+
+# ------------------------------------------------ einsum (GShard) path -- //
+
+def _moe_einsum(params, x, cfg: MoEConfig):
+    T, d = x.shape
+    E, C = cfg.n_experts, _capacity(T, cfg)
+    ids, w = _route(params, x, cfg)                               # (T,k)
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)              # (T,k,E)
+    # position of each (token, slot) within its expert queue
+    pos = jnp.cumsum(onehot.reshape(T * cfg.top_k, E), axis=0).reshape(
+        T, cfg.top_k, E) * onehot - 1
+    keep = (pos >= 0) & (pos < C)
+    # dispatch (T, E, C) one-hot  &  combine (T, E, C) weighted
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, -1), C, dtype=x.dtype)
+    disp = jnp.einsum("tke,tkec->tec", onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("tke,tkec,tk->tec", onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32), w).astype(x.dtype)
+    xin = jnp.einsum("tec,td->ecd", disp, x)                      # all-to-all
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, params["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xin, params["w_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"])
+    return jnp.einsum("tec,ecd->td", comb, out_e)                 # all-to-all
+
+
+# --------------------------------------------------- sort-based path --- //
+
+def _moe_sort(params, x, cfg: MoEConfig):
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    ids, w = _route(params, x, cfg)                               # (T,k)
+    flat_e = ids.reshape(-1)                                      # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    w_sorted = flat_w[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = rank < C
+    slot = jnp.where(keep, e_sorted * C + rank, E * C)            # drop overflow
+    buf = jnp.zeros((E * C, d), x.dtype).at[slot].set(
+        x[t_sorted], mode="drop").reshape(E, C, d)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"]).reshape(
+        E * C, d)
+    gathered = out_e[jnp.where(keep, slot, 0)] * (
+        w_sorted * keep.astype(jnp.float32))[:, None].astype(x.dtype)
+    return jnp.zeros((T, d), x.dtype).at[t_sorted].add(gathered)
+
+
+# ----------------------------------------------------------- public ---- //
+
+def moe_apply(params, x, cfg: MoEConfig):
+    """x (..., d) -> (..., d). Shared experts (if any) added densely.
+
+    With ``group_size`` g, tokens route independently inside (T/g) groups
+    (GShard's grouping): dispatch/capacity tensors are (g, E, C_g) per group
+    instead of (T, E, C) — the difference between 500 MB and 50 GB transients
+    at the deepseek train cell (EXPERIMENTS.md §Perf napkin math)."""
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, x.shape[-1])
+    T = xt.shape[0]
+    fn = {"einsum": _moe_einsum, "sort": _moe_sort}[cfg.dispatch]
+    g = cfg.group_size
+    if g and T > g and T % g == 0:
+        xg = xt.reshape(T // g, g, x.shape[-1])
+        out = jax.vmap(lambda xi: fn(params, xi, cfg))(xg)
+        out = out.reshape(T, x.shape[-1])
+    else:
+        out = fn(params, xt, cfg)
+    if cfg.n_shared:
+        out = out + swiglu_apply(params["shared"], xt)
+    return out.reshape(*lead, x.shape[-1])

@@ -1,0 +1,467 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+One config drives: dense (codeqwen1.5 / qwen3 / danube3) and MoE (mixtral,
+deepseek-v2) stacks; GQA or MLA attention; full or sliding-window masks;
+qk-norm; RoPE. Layers are scanned (stacked params) for O(1) HLO size and
+compile time at 60 layers; remat policy per config.
+
+Entry points:
+  init(cfg, key)                              -> params (eval_shape-safe)
+  forward(cfg, params, tokens, weights)       -> (loss, logits)   [train]
+  prefill(cfg, params, tokens)                -> (logits, cache)  [serve]
+  decode_step(cfg, params, cache, token, pos) -> (logits, cache)  [serve]
+
+KV caches: GQA keeps (k, v) per layer; SWA keeps a ring buffer of ``window``
+entries; MLA keeps the compressed latent (c_kv, k_pe) — with the *absorbed*
+decode path (cfg.mla_absorb) queries are folded into latent space so decode
+never re-materializes per-head K/V (DeepSeek-V2 §2.1's intent; our §Perf
+baseline starts un-absorbed to quantify the win).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, attention_scores_mask, fan_in_init,
+                     flash_sdpa, normal_init, rmsnorm, sdpa, swiglu_apply,
+                     swiglu_init, weighted_xent)
+from .moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                      # 0 -> d_model // n_heads
+    attention: str = "full"                # full | swa
+    window: int = 4096
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # --- MLA (deepseek-v2) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0                   # 0 -> no q compression
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    mla_absorb: bool = False
+    # --- MoE ---
+    n_experts: int = 0                     # 0 -> dense FFN
+    moe_top_k: int = 2
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    moe_dispatch: str = "einsum"
+    moe_group_size: int = 8192             # token group for dispatch tensors
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0
+    # --- numerics / execution ---
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"                    # none | full | dots
+    attn_q_block: int = 1024               # flash-chunked attention tiles
+    attn_k_block: int = 1024
+    gqa_expand_kv: bool = False            # expand K/V to H heads pre-attn:
+                                           # removes the (Kv,G) grouping
+                                           # reshape so attention shards on H
+                                           # even when Kv < model axis
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def sliding_window(self) -> Optional[int]:
+        return self.window if self.attention == "swa" else None
+
+    @property
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(
+            n_experts=self.n_experts, top_k=self.moe_top_k,
+            d_model=self.d_model, d_ff_expert=self.d_ff_expert or self.d_ff,
+            n_shared=self.n_shared_experts,
+            d_ff_shared=self.n_shared_experts * (self.d_ff_expert or self.d_ff),
+            capacity_factor=self.capacity_factor, dispatch=self.moe_dispatch,
+            group_size=self.moe_group_size)
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (used for MODEL_FLOPS = 6·N·D)."""
+        shapes = jax.eval_shape(lambda k: init(self, k), jax.random.PRNGKey(0))
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (routed top-k + shared + non-FFN)."""
+        if not self.is_moe:
+            return self.param_count()
+        total = self.param_count()
+        fe = self.d_ff_expert or self.d_ff
+        per_expert = 3 * self.d_model * fe
+        n_moe_layers = self.n_layers - self.first_dense_layers
+        inactive = n_moe_layers * (self.n_experts - self.moe_top_k) * per_expert
+        return total - inactive
+
+
+# ------------------------------------------------------------- attention -- //
+
+def _attn_init(cfg: TransformerConfig, key):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 8)
+    p = {"norm": jnp.ones((d,), jnp.float32)}
+    if cfg.use_mla:
+        c, r, nope, vd = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                          cfg.v_head_dim)
+        qd = nope + r
+        if cfg.q_lora_rank:
+            p["wq_a"] = fan_in_init(ks[0], (d, cfg.q_lora_rank), cfg.dtype)
+            p["q_norm"] = jnp.ones((cfg.q_lora_rank,), jnp.float32)
+            p["wq_b"] = fan_in_init(ks[1], (cfg.q_lora_rank, H, qd), cfg.dtype)
+        else:
+            p["wq"] = fan_in_init(ks[1], (d, H, qd), cfg.dtype)
+        p["wkv_a"] = fan_in_init(ks[2], (d, c + r), cfg.dtype)
+        p["kv_norm"] = jnp.ones((c,), jnp.float32)
+        p["wkv_b"] = fan_in_init(ks[3], (c, H, nope + vd), cfg.dtype)
+        p["wo"] = fan_in_init(ks[4], (H, vd, d), cfg.dtype)
+    else:
+        Kv = cfg.n_kv_heads
+        p["wq"] = fan_in_init(ks[0], (d, H, hd), cfg.dtype)
+        p["wk"] = fan_in_init(ks[1], (d, Kv, hd), cfg.dtype)
+        p["wv"] = fan_in_init(ks[2], (d, Kv, hd), cfg.dtype)
+        p["wo"] = fan_in_init(ks[3], (H, hd, d), cfg.dtype)
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.ones((hd,), jnp.float32)
+            p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _gqa_qkv(p, cfg, x, positions):
+    """-> q (B,S,Kv,G,hd), k (B,S,Kv,hd), v (B,S,Kv,hd)."""
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])          # (B,S,H,hd)
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, Kv, H // Kv, hd)
+    return q, k, v
+
+
+def _expand_kv(cfg: TransformerConfig, q, k, v):
+    """GQA -> MHA view: replicate each KV head across its query group so the
+    attention einsums shard on H (no (Kv,G) grouping reshape). Used when
+    cfg.gqa_expand_kv — per device only the local heads' copies materialize."""
+    B, S, Kv, G, hd = q.shape
+    H = Kv * G
+    idx = jnp.arange(H, dtype=jnp.int32) // G
+    return (q.reshape(B, S, H, 1, hd), k[:, :, idx, :], v[:, :, idx, :])
+
+
+def _mla_q(p, cfg, x, positions):
+    """-> q_nope (B,S,H,nope), q_pe (B,S,H,rope)."""
+    if cfg.q_lora_rank:
+        q = rmsnorm(x @ p["wq_a"], p["q_norm"])
+        q = jnp.einsum("bsl,lhe->bshe", q, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_pe = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_latent(p, cfg, x, positions):
+    """-> c_kv (B,S,c) normalized latent, k_pe (B,S,rope) shared-rope key."""
+    kv = x @ p["wkv_a"]                                   # (B,S,c+r)
+    c_kv = rmsnorm(kv[..., :cfg.kv_lora_rank], p["kv_norm"])
+    k_pe = apply_rope(kv[..., None, cfg.kv_lora_rank:],   # 1 shared "head"
+                      positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_pe
+
+
+def _mla_kv_heads(p, cfg, c_kv, k_pe):
+    """Materialize per-head K/V from the latent (train/prefill/naive-decode):
+    k (B,S,H,nope+rope), v (B,S,H,vd)."""
+    nope, vd = cfg.qk_nope_dim, cfg.v_head_dim
+    kvb = jnp.einsum("bsc,che->bshe", c_kv, p["wkv_b"])   # (B,S,H,nope+vd)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+    H = k_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :],
+                                  (*k_pe.shape[:2], H, k_pe.shape[-1]))], -1)
+    return k, v
+
+
+def _mla_attention(p, cfg, x, positions, k_positions, c_kv, k_pe, mask):
+    """Full (un-absorbed) MLA attention; used for naive decode baselines."""
+    q_nope, q_pe = _mla_q(p, cfg, x, positions)
+    q = jnp.concatenate([q_nope, q_pe], -1)               # (B,Sq,H,nope+r)
+    k, v = _mla_kv_heads(p, cfg, c_kv, k_pe)
+    B, Sq = q.shape[:2]
+    H = q.shape[2]
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    ctx = sdpa(q.reshape(B, Sq, H, 1, -1), k, v, mask, scale=scale)
+    ctx = ctx.reshape(B, Sq, H, cfg.v_head_dim)
+    return jnp.einsum("bqhv,hvd->bqd", ctx, p["wo"])
+
+
+def _mla_attention_absorbed(p, cfg, x, positions, c_kv, k_pe, mask):
+    """Absorbed MLA decode: scores and values in latent space — no per-head
+    K/V materialization over the 32k..500k cache."""
+    q_nope, q_pe = _mla_q(p, cfg, x, positions)
+    nope, vd = cfg.qk_nope_dim, cfg.v_head_dim
+    w_k = p["wkv_b"][..., :nope]                          # (c,H,nope)
+    w_v = p["wkv_b"][..., nope:]                          # (c,H,vd)
+    q_lat = jnp.einsum("bqhn,chn->bqhc", q_nope, w_k)
+    scale = 1.0 / math.sqrt(nope + cfg.qk_rope_dim)
+    scores = (jnp.einsum("bqhc,bkc->bhqk", q_lat, c_kv) +
+              jnp.einsum("bqhr,bkr->bhqk", q_pe, k_pe)
+              ).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, :, :], scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhqk,bkc->bqhc", probs, c_kv)
+    ctx = jnp.einsum("bqhc,chv->bqhv", ctx_lat, w_v)
+    return jnp.einsum("bqhv,hvd->bqd", ctx, p["wo"])
+
+
+def _attn_apply(p, cfg: TransformerConfig, x, positions):
+    """Self-attention over the in-context sequence (train / prefill) via the
+    flash-chunked path — O(S) memory at 32k."""
+    B, S = x.shape[:2]
+    if cfg.use_mla:
+        c_kv, k_pe = _mla_latent(p, cfg, x, positions)
+        q_nope, q_pe = _mla_q(p, cfg, x, positions)
+        q = jnp.concatenate([q_nope, q_pe], -1)           # (B,S,H,nope+r)
+        k, v = _mla_kv_heads(p, cfg, c_kv, k_pe)
+        scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+        ctx = flash_sdpa(q.reshape(B, S, cfg.n_heads, 1, -1), k, v,
+                         positions, positions, cfg.sliding_window, scale,
+                         cfg.attn_q_block, cfg.attn_k_block)
+        ctx = ctx.reshape(B, S, cfg.n_heads, cfg.v_head_dim)
+        return jnp.einsum("bqhv,hvd->bqd", ctx, p["wo"])
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    if cfg.gqa_expand_kv:
+        q, k, v = _expand_kv(cfg, q, k, v)
+    out = flash_sdpa(q, k, v, positions, positions, cfg.sliding_window,
+                     None, cfg.attn_q_block, cfg.attn_k_block)
+    out = out.reshape(B, S, cfg.n_heads, cfg.hd)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+# ------------------------------------------------------------- layer ----- //
+
+def _layer_init(cfg: TransformerConfig, key, moe: bool):
+    ka, kf = jax.random.split(key)
+    p = {"attn": _attn_init(cfg, ka),
+         "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if moe:
+        p["moe"] = moe_init(kf, cfg.moe_cfg, cfg.dtype)
+    else:
+        p["ffn"] = swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def _layer_apply(p, cfg: TransformerConfig, x, positions, moe: bool):
+    h = rmsnorm(x, p["attn"]["norm"])
+    x = x + _attn_apply(p["attn"], cfg, h, positions)
+    h = rmsnorm(x, p["ffn_norm"])
+    if moe:
+        x = x + moe_apply(p["moe"], h, cfg.moe_cfg)
+    else:
+        x = x + swiglu_apply(p["ffn"], h)
+    return x
+
+
+# ------------------------------------------------------------- model ----- //
+
+def init(cfg: TransformerConfig, key):
+    ke, kl, kd, ko = jax.random.split(key, 4)
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    layer_keys = jax.random.split(kl, n_scan)
+    stacked = jax.vmap(
+        lambda k: _layer_init(cfg, k, moe=cfg.is_moe))(layer_keys)
+    params = {
+        "embed": normal_init(ke, (cfg.vocab, cfg.d_model), cfg.dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": fan_in_init(ko, (cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+    if cfg.first_dense_layers:
+        dk = jax.random.split(kd, cfg.first_dense_layers)
+        params["dense_layers"] = [
+            _layer_init(cfg, dk[i], moe=False)
+            for i in range(cfg.first_dense_layers)]
+    return params
+
+
+def _stack_apply(cfg, params, x, positions):
+    for p in params.get("dense_layers", []):
+        x = _layer_apply(p, cfg, x, positions, moe=False)
+
+    def body(carry, lp):
+        return _layer_apply(lp, cfg, carry, positions, moe=cfg.is_moe), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return x
+
+
+def forward(cfg: TransformerConfig, params, tokens, weights=None):
+    """Training objective: next-token prediction, per-sequence loss weights
+    (the dedup pipeline's output). tokens (B, S+1) int32 -> (loss, logits)."""
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    B, S = inp.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"][inp]
+    x = _stack_apply(cfg, params, x, positions)
+    x = rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    if weights is None:
+        weights = jnp.ones((B,), jnp.float32)
+    loss = weighted_xent(logits, labels,
+                         jnp.broadcast_to(weights[:, None], (B, S)))
+    return loss, logits
+
+
+# ------------------------------------------------------------- serving --- //
+
+def cache_spec(cfg: TransformerConfig, batch: int, max_seq: int):
+    """ShapeDtypeStructs of the decode cache (for dry-run input_specs)."""
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    L = cfg.n_layers
+    S = min(max_seq, cfg.window) if cfg.attention == "swa" else max_seq
+    f = jax.ShapeDtypeStruct
+    if cfg.use_mla:
+        return {
+            "ckv": f((L, batch, S, cfg.kv_lora_rank), cfg.dtype),
+            "kpe": f((L, batch, S, cfg.qk_rope_dim), cfg.dtype),
+            "kpos": f((L, batch, S), jnp.int32),
+        }
+    return {
+        "k": f((L, batch, S, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "v": f((L, batch, S, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "kpos": f((L, batch, S), jnp.int32),
+    }
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int):
+    return jax.tree.map(
+        lambda sd: jnp.full(sd.shape, -1, sd.dtype)
+        if sd.dtype == jnp.int32 else jnp.zeros(sd.shape, sd.dtype),
+        cache_spec(cfg, batch, max_seq))
+
+
+def _cache_slot(cfg, pos):
+    """Ring-buffer slot for SWA; identity otherwise."""
+    if cfg.attention == "swa":
+        return pos % cfg.window
+    return pos
+
+
+def _layer_decode(cfg: TransformerConfig, p, cache_l, x, pos, moe: bool):
+    """One layer of single-token decode. cache_l leaves are (B, S, ...);
+    returns (x, new_cache_l)."""
+    B = x.shape[0]
+    positions = pos[:, None]
+    h = rmsnorm(x, p["attn"]["norm"])
+    slot = _cache_slot(cfg, pos)                          # (B,)
+    barange = jnp.arange(B)
+    kpos_l = cache_l["kpos"].at[barange, slot].set(pos)
+    mask = attention_scores_mask(
+        positions, kpos_l, cfg.sliding_window) & (kpos_l >= 0)[:, None, :]
+    if cfg.use_mla:
+        c_kv, k_pe = _mla_latent(p["attn"], cfg, h, positions)
+        ckv_l = cache_l["ckv"].at[barange, slot].set(c_kv[:, 0])
+        kpe_l = cache_l["kpe"].at[barange, slot].set(k_pe[:, 0])
+        new_cache_l = {"ckv": ckv_l, "kpe": kpe_l, "kpos": kpos_l}
+        if cfg.mla_absorb:
+            out = _mla_attention_absorbed(
+                p["attn"], cfg, h, positions, ckv_l, kpe_l, mask)
+        else:
+            out = _mla_attention(
+                p["attn"], cfg, h, positions, kpos_l, ckv_l, kpe_l, mask)
+    else:
+        q, k, v = _gqa_qkv(p["attn"], cfg, h, positions)
+        k_l = cache_l["k"].at[barange, slot].set(k[:, 0])
+        v_l = cache_l["v"].at[barange, slot].set(v[:, 0])
+        new_cache_l = {"k": k_l, "v": v_l, "kpos": kpos_l}
+        if cfg.gqa_expand_kv:
+            q, k_att, v_att = _expand_kv(cfg, q, k_l, v_l)
+            out = sdpa(q, k_att, v_att, mask)
+        else:
+            out = sdpa(q, k_l, v_l, mask)
+        out = out.reshape(B, 1, cfg.n_heads, cfg.hd)
+        out = jnp.einsum("bshe,hed->bsd", out, p["attn"]["wo"])
+    x = x + out
+    h2 = rmsnorm(x, p["ffn_norm"])
+    if moe:
+        x = x + moe_apply(p["moe"], h2, cfg.moe_cfg)
+    else:
+        x = x + swiglu_apply(p["ffn"], h2)
+    return x, new_cache_l
+
+
+def decode_step(cfg: TransformerConfig, params, cache, token, pos):
+    """One-token decode. token (B,) int32, pos (B,) int32 (current position).
+    -> (logits (B, V), new_cache). serve_step lowered by the dry-run.
+    Layers are scanned over (stacked params, stacked cache) — O(1) HLO at
+    any depth."""
+    nd = cfg.first_dense_layers
+    x = params["embed"][token][:, None, :]                # (B,1,d)
+
+    dense_updates = []
+    for i, p in enumerate(params.get("dense_layers", [])):
+        cl = jax.tree.map(lambda c: c[i], cache)
+        x, ncl = _layer_decode(cfg, p, cl, x, pos, moe=False)
+        dense_updates.append(ncl)
+
+    cache_scan = jax.tree.map(lambda c: c[nd:], cache)
+
+    def body(carry, xs):
+        lp, cl = xs
+        y, ncl = _layer_decode(cfg, lp, cl, carry, pos, moe=cfg.is_moe)
+        return y, ncl
+
+    x, new_scan_cache = jax.lax.scan(body, x, (params["layers"], cache_scan))
+
+    if dense_updates:
+        stacked_dense = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *dense_updates)
+        new_cache = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0),
+            stacked_dense, new_scan_cache)
+    else:
+        new_cache = new_scan_cache
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, new_cache
+
+
+def prefill(cfg: TransformerConfig, params, tokens):
+    """Prefill: full forward returning logits; cache construction for
+    follow-on decode is exercised separately (decode_step owns cache writes).
+    tokens (B, S) -> logits (B, S, V)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"][tokens]
+    x = _stack_apply(cfg, params, x, positions)
+    x = rmsnorm(x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])

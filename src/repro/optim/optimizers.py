@@ -1,0 +1,115 @@
+"""Optimizers (pure pytree transforms, no optax dependency).
+
+AdamW with decoupled weight decay + global-norm clipping + warmup-cosine
+schedule; SGD-momentum for the GNN/recsys baselines. Moments live in fp32
+regardless of param dtype (bf16-safe). ZeRO-1 sharding of the moments is a
+*spec* decision (distributed/sharding.zero_shard_spec) — the math here is
+layout-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"              # adamw | sgd
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9            # sgd
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: object          # pytree like params (fp32) — adam m / sgd momentum
+    v: object          # pytree like params (fp32) — adam v / unused for sgd
+
+
+def init_opt_state(cfg: OptimizerConfig, params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    v = zeros if cfg.kind == "adamw" else jax.tree.map(
+        lambda p: jnp.zeros((), jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=v)
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = jnp.clip((s - cfg.warmup_steps) /
+                    jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state: OptState):
+    """-> (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.betas
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        new_p, new_m, new_v = [], [], []
+        flat_p, tree = jax.tree.flatten(params)
+        for p, g, m, v in zip(flat_p, jax.tree.leaves(grads),
+                              jax.tree.leaves(state.m),
+                              jax.tree.leaves(state.v)):
+            np_, nm, nv = upd(p, g, m, v)
+            new_p.append(np_), new_m.append(nm), new_v.append(nv)
+        params = jax.tree.unflatten(tree, new_p)
+        new_state = OptState(step, jax.tree.unflatten(tree, new_m),
+                             jax.tree.unflatten(tree, new_v))
+    elif cfg.kind == "sgd":
+        def upd(p, g, m):
+            m = cfg.momentum * m + g
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_p, tree = jax.tree.flatten(params)
+        new_p, new_m = [], []
+        for p, g, m in zip(flat_p, jax.tree.leaves(grads),
+                           jax.tree.leaves(state.m)):
+            np_, nm = upd(p, g, m)
+            new_p.append(np_), new_m.append(nm)
+        params = jax.tree.unflatten(tree, new_p)
+        new_state = OptState(step, jax.tree.unflatten(tree, new_m), state.v)
+    else:
+        raise ValueError(cfg.kind)
+
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,5 @@
+"""Serving substrate."""
+
+from .engine import ServeSession, make_decode_step, make_prefill_step
+
+__all__ = ["ServeSession", "make_decode_step", "make_prefill_step"]

@@ -1,0 +1,7 @@
+"""Training substrate: pjit steps, fault-tolerant loop."""
+
+from .steps import jit_sharded, make_train_step
+from .trainer import StragglerWatchdog, Trainer, TrainerConfig, remesh
+
+__all__ = ["jit_sharded", "make_train_step", "StragglerWatchdog", "Trainer",
+           "TrainerConfig", "remesh"]

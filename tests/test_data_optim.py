@@ -1,0 +1,118 @@
+"""Data plane + optimizer substrate tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.graphs import CSRGraph, NeighborSampler, molecule_batch, random_graph
+from repro.data.lm import BigramCorpus, lm_batches, seq_keys
+from repro.data.recsys_data import CTRStream
+from repro.optim import (OptimizerConfig, apply_updates, clip_by_global_norm,
+                         init_opt_state, schedule)
+
+
+# ------------------------------------------------------------------ data -- //
+
+def test_neighbor_sampler_shapes_and_validity():
+    g = random_graph(n_nodes=500, n_edges=4000, d_feat=8, seed=0)
+    csr = CSRGraph.from_edges(500, g["src"], g["dst"], g["nodes"],
+                              g["targets"])
+    samp = NeighborSampler(csr, fanouts=(5, 3), batch_nodes=16, seed=1)
+    sub = samp.sample()
+    N, E = samp.max_nodes, samp.max_edges
+    assert N == 16 * (1 + 5 + 15) and E == 16 * (5 + 15)
+    assert sub["nodes"].shape == (N, 8)
+    assert sub["src"].shape == (E,) and sub["dst"].shape == (E,)
+    em = sub["edge_mask"]
+    # valid edges index valid local nodes; seeds carry the loss mask
+    assert (sub["src"][em] < N).all() and (sub["dst"][em] < N).all()
+    assert sub["node_mask"][:16].all() and not sub["node_mask"][16:].any()
+    # dst of hop-1 edges are seed-local indices
+    assert (sub["dst"][em] < 16 * (1 + 5)).all()
+
+
+def test_molecule_batch_disjoint():
+    b = molecule_batch(n_graphs=4, nodes_per=5, edges_per=6, d_feat=3)
+    # every edge stays within its graph's node range
+    graph_of_src = np.asarray(b["src"]) // 5
+    graph_of_dst = np.asarray(b["dst"]) // 5
+    assert np.array_equal(graph_of_src, graph_of_dst)
+
+
+def test_bigram_corpus_learnable_structure():
+    c = BigramCorpus(vocab=32, seed=0)
+    toks = c.sample(64, 50)
+    # empirical bigram dist should beat uniform in log-likelihood
+    ll_model, ll_unif = 0.0, 0.0
+    for b in range(64):
+        for t in range(1, 50):
+            ll_model += np.log(c.probs[toks[b, t - 1], toks[b, t]] + 1e-9)
+            ll_unif += np.log(1 / 32)
+    assert ll_model > ll_unif
+
+
+def test_lm_batches_inject_exact_duplicates():
+    it = lm_batches(vocab=64, batch=16, seq=20, dup_frac=0.5, seed=0)
+    b1 = next(it)
+    b2 = next(it)
+    k1, k2 = set(b1["key"].tolist()), b2["key"].tolist()
+    n_replayed = sum(1 for k in k2 if k in k1)
+    assert n_replayed >= 4
+    # keys identify content: equal keys -> equal token rows
+    kmap = {}
+    for row, k in zip(b1["tokens"], b1["key"]):
+        kmap[int(k)] = row
+    for row, k in zip(b2["tokens"], b2["key"]):
+        if int(k) in kmap:
+            assert np.array_equal(row, kmap[int(k)])
+
+
+def test_ctr_stream_learnable_and_dedupable():
+    s = CTRStream(n_dense=4, vocab_sizes=[100] * 6, dup_frac=0.25, seed=0)
+    b1 = s.batch(256)
+    b2 = s.batch(256)
+    assert b1["dense"].shape == (256, 4)
+    assert b1["labels"].min() >= 0 and b1["labels"].max() <= 1
+    replay = np.isin(b2["key"], b1["key"]).mean()
+    assert replay > 0.1
+
+
+# ----------------------------------------------------------------- optim -- //
+
+def test_adamw_minimizes_quadratic():
+    cfg = OptimizerConfig(kind="adamw", lr=0.1, weight_decay=0.0,
+                          warmup_steps=1, total_steps=200)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_opt_state(cfg, params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_sgd_momentum_minimizes():
+    cfg = OptimizerConfig(kind="sgd", lr=0.05, momentum=0.9,
+                          warmup_steps=1, total_steps=100)
+    params = {"w": jnp.asarray(4.0)}
+    state = init_opt_state(cfg, params)
+    for _ in range(80):
+        params, state, _ = apply_updates(cfg, params, {"w": 2 * params["w"]},
+                                         state)
+    assert abs(float(params["w"])) < 0.2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(gn), np.sqrt(1000.0), rtol=1e-5)
+    total = float(jnp.sqrt(sum((x ** 2).sum()
+                               for x in jax.tree.leaves(clipped))))
+    assert np.isclose(total, 1.0, rtol=1e-4)
+
+
+def test_schedule_warmup_cosine():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.asarray(5))) == 0.5
+    assert float(schedule(cfg, jnp.asarray(10))) >= 0.99
+    assert np.isclose(float(schedule(cfg, jnp.asarray(100))), 0.1, atol=1e-3)

@@ -1,0 +1,152 @@
+"""Model-family correctness: flash==naive attention, MoE path equivalence,
+MLA absorb equivalence, decode==prefill consistency, GNN aggregation."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import gnn, recsys
+from repro.models.layers import attention_scores_mask, flash_sdpa, sdpa
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.transformer import (TransformerConfig, decode_step, forward,
+                                      init, init_cache, prefill)
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab=128, dtype=jnp.float32, attn_q_block=32, attn_k_block=32)
+
+
+@pytest.mark.parametrize("win", [None, 17])
+@pytest.mark.parametrize("shape", [(2, 100, 2, 2, 16), (1, 257, 1, 4, 8)])
+def test_flash_equals_naive(win, shape):
+    B, S, Kv, G, D = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Kv, G, D))
+    k = jax.random.normal(ks[1], (B, S, Kv, D))
+    v = jax.random.normal(ks[2], (B, S, Kv, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    ref = sdpa(q, k, v, attention_scores_mask(pos, pos, win))
+    got = flash_sdpa(q, k, v, pos, pos, win, q_block=32, k_block=48)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_moe_sort_equals_einsum():
+    cfg = MoEConfig(n_experts=4, top_k=2, d_model=32, d_ff_expert=64,
+                    capacity_factor=4.0)
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    a = moe_apply(p, x, cfg)
+    b = moe_apply(p, x, cfg._replace(dispatch="sort"))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_moe_grouping_preserves_routing():
+    cfg = MoEConfig(n_experts=4, top_k=2, d_model=32, d_ff_expert=64,
+                    capacity_factor=8.0, dispatch="sort")
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    a = moe_apply(p, x, cfg)
+    b = moe_apply(p, x, cfg._replace(group_size=16))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_mla_absorbed_equals_naive_decode():
+    base = dict(BASE, use_mla=True, q_lora_rank=32, kv_lora_rank=32,
+                qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+    c1 = TransformerConfig(name="a", mla_absorb=False, **base)
+    c2 = TransformerConfig(name="b", mla_absorb=True, **base)
+    params = init(c1, jax.random.PRNGKey(0))
+    cache1, cache2 = init_cache(c1, 2, 16), init_cache(c2, 2, 16)
+    tok = jnp.array([5, 7], jnp.int32)
+    for t in range(5):
+        pos = jnp.full((2,), t, jnp.int32)
+        l1, cache1 = decode_step(c1, params, cache1, tok, pos)
+        l2, cache2 = decode_step(c2, params, cache2, tok, pos)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
+        tok = jnp.argmax(l1, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("extra", [
+    {}, {"attention": "swa", "window": 8},
+    {"use_mla": True, "q_lora_rank": 32, "kv_lora_rank": 32,
+     "qk_nope_dim": 16, "qk_rope_dim": 8, "v_head_dim": 16},
+])
+def test_decode_matches_prefill(extra):
+    """Teacher-forced decode logits == forward logits position by position —
+    the KV-cache write/read path (incl. SWA ring buffer) is consistent with
+    the full-sequence path."""
+    cfg = TransformerConfig(name="x", **{**BASE, **extra})
+    params = init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full_logits = prefill(cfg, params, toks)          # (B, S, V)
+    cache = init_cache(cfg, B, S)
+    for t in range(S):
+        pos = jnp.full((B,), t, jnp.int32)
+        lg, cache = decode_step(cfg, params, cache, toks[:, t], pos)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full_logits[:, t]),
+                                   atol=3e-4,
+                                   err_msg=f"position {t} ({extra})")
+
+
+def test_gqa_expand_kv_equivalence():
+    """The expand-KV sharding optimization (EXPERIMENTS.md §Perf C') must be
+    a pure layout change: identical forward loss and decode logits."""
+    c1 = TransformerConfig(name="a", **BASE)
+    c2 = TransformerConfig(name="b", gqa_expand_kv=True, **BASE)
+    params = init(c1, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 33), 0, c1.vocab)
+    l1, _ = forward(c1, params, toks)
+    l2, _ = forward(c2, params, toks)
+    assert abs(float(l1) - float(l2)) < 1e-6
+    cache1, cache2 = init_cache(c1, 2, 8), init_cache(c2, 2, 8)
+    tok = jnp.array([3, 4], jnp.int32)
+    for t in range(3):
+        pos = jnp.full((2,), t, jnp.int32)
+        o1, cache1 = decode_step(c1, params, cache1, tok, pos)
+        o2, cache2 = decode_step(c2, params, cache2, tok, pos)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_gnn_segment_aggregation_correct():
+    """segment_sum message passing == explicit python aggregation."""
+    cfg = gnn.GNNConfig(n_layers=1, d_hidden=8, d_node_in=4, d_edge_in=4,
+                        d_out=2, mlp_layers=1)
+    params = gnn.init(cfg, jax.random.PRNGKey(0))
+    N, E = 6, 10
+    r = np.random.default_rng(0)
+    batch = {
+        "nodes": jnp.asarray(r.normal(size=(N, 4)), jnp.float32),
+        "edges": jnp.asarray(r.normal(size=(E, 4)), jnp.float32),
+        "src": jnp.asarray(r.integers(0, N, E), jnp.int32),
+        "dst": jnp.asarray(r.integers(0, N, E), jnp.int32),
+        "edge_mask": jnp.asarray(r.random(E) < 0.8),
+        "node_mask": jnp.ones(N, bool),
+        "targets": jnp.zeros((N, 2), jnp.float32),
+    }
+    out = gnn.forward(cfg, params, batch)
+    assert out.shape == (N, 2)
+    assert np.isfinite(np.asarray(out)).all()
+    # masked edges must not contribute: zeroing them changes nothing
+    batch2 = dict(batch)
+    batch2["edges"] = jnp.where(batch["edge_mask"][:, None], batch["edges"],
+                                999.0)
+    out2 = gnn.forward(cfg, params, batch2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)
+
+
+def test_recsys_dedup_gather_equivalence():
+    common = dict(n_dense=4, n_sparse=6, embed_dim=8,
+                  vocab_sizes=tuple([100] * 6), mlp_dims=(32, 16))
+    cfg = recsys.RecSysConfig(name="wd", interaction="concat", **common)
+    cfg2 = dataclasses.replace(cfg, dedup_gather=True)
+    params = recsys.init(cfg, jax.random.PRNGKey(0))
+    r = np.random.default_rng(0)
+    batch = {"dense": jnp.asarray(r.normal(size=(32, 4)), jnp.float32),
+             "sparse_ids": jnp.asarray(r.integers(0, 100, (32, 6)), jnp.int32)}
+    a = recsys.forward(cfg, params, batch)
+    b = recsys.forward(cfg2, params, batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,77 @@
+"""DedupPipeline / ServeSession / data-plane integration."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DedupConfig
+from repro.data.streams import clickstream, controlled_distinct_stream, zipf_stream
+from repro.dedup import DedupPipeline, truth_from_stream
+from repro.serve import ServeSession
+
+
+def _cfg(**kw):
+    kw.setdefault("batch_size", 1024)
+    return DedupConfig.for_variant("rlbsbf", memory_bits=1 << 16, **kw)
+
+
+def test_pipeline_drop_zeroes_duplicate_weights():
+    pipe = DedupPipeline(_cfg(), mode="drop")
+    keys = np.array([1, 2, 3, 1, 2, 4, 1], dtype=np.uint32)
+    keys = np.pad(keys, (0, 1017), constant_values=np.arange(5, 1022,
+                  dtype=np.uint32)[0])  # noqa — fill distinct tail
+    keys[7:] = np.arange(100, 100 + 1017, dtype=np.uint32)
+    out = pipe.process({"key": jnp.asarray(keys)})
+    w = np.asarray(out.weights)
+    assert w[3] == 0.0 and w[4] == 0.0 and w[6] == 0.0   # replays dropped
+    assert w[0] == 1.0 and w[5] == 1.0
+
+
+def test_pipeline_metrics_and_convergence():
+    keys, truth = zipf_stream(60_000, universe=20_000, seed=0)
+    pipe = DedupPipeline(_cfg(), mode="flag")
+    for i in range(0, len(keys), 1024):
+        chunk = keys[i:i + 1024]
+        if len(chunk) < 1024:
+            break
+        pipe.process({"key": jnp.asarray(chunk)},
+                     truth_dup=truth[i:i + 1024])
+    s = pipe.metrics.summary()
+    assert s["fnr"] < 0.2 and s["fpr"] < 0.2
+    assert s["final_load"] is not None and 0 < s["final_load"] < 1
+
+
+def test_clickstream_fraud_detection():
+    """The paper's §1 click-fraud case: bursts of identical clicks must be
+    flagged at high recall."""
+    data, truth = clickstream(40_000, fraud_frac=0.1, burst=20, seed=1)
+    pipe = DedupPipeline(_cfg(), mode="flag")
+    dups = []
+    for i in range(0, 40_000 - 1024, 1024):
+        out = pipe.process({"key": jnp.asarray(data["key"][i:i + 1024])})
+        dups.append(np.asarray(out.dup))
+    dup = np.concatenate(dups)
+    t = truth[:len(dup)]
+    recall = (dup & t).sum() / max(1, t.sum())
+    assert recall > 0.8
+
+
+def test_serve_session_caches_duplicates():
+    calls = {"n": 0}
+
+    def score_fn(batch):
+        calls["n"] += len(batch["key"])
+        return np.asarray(batch["key"], np.float64) * 2.0
+
+    sess = ServeSession(_cfg(batch_size=64), score_fn)
+    keys = np.array([1, 2, 3, 4] * 16, dtype=np.uint32)
+    out1 = sess.serve({"key": keys})
+    assert np.array_equal(out1, keys * 2.0)       # dedup never changes answers
+    out2 = sess.serve({"key": keys})
+    assert np.array_equal(out2, keys * 2.0)
+    assert sess.hit_rate > 0.3                     # replays served from cache
+    assert calls["n"] < 2 * len(keys)
+
+
+def test_truth_from_stream_matches_generator():
+    keys, truth = controlled_distinct_stream(5000, 0.4, seed=3)
+    assert np.array_equal(truth, truth_from_stream(keys))

@@ -1,0 +1,93 @@
+"""Hypothesis property-based tests on the system's exact invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batched import intra_batch_seen
+from repro.core.hashing import hash_positions, derive_seeds, route_hash
+from repro.core.packed import pack_bits, popcount, split_pos, unpack_bits
+from repro.dedup.pipeline import unique_gather
+
+_SET = settings(max_examples=40, deadline=None)
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=300),
+       st.lists(st.booleans(), min_size=1, max_size=300))
+@_SET
+def test_intra_batch_seen_matches_python(keys, valid):
+    n = min(len(keys), len(valid))
+    keys, valid = keys[:n], valid[:n]
+    got = np.asarray(intra_batch_seen(
+        jnp.asarray(keys, jnp.uint32), jnp.asarray(valid)))
+    seen = set()
+    want = []
+    for k, v in zip(keys, valid):
+        if not v:
+            want.append(False)
+            continue
+        want.append(k in seen)
+        seen.add(k)
+    assert got.tolist() == want
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=200))
+@_SET
+def test_unique_gather_reconstructs(ids):
+    ids_a = jnp.asarray(ids, jnp.int32)
+    table = jnp.arange(64, dtype=jnp.float32)[:, None] * jnp.ones((1, 3))
+    uniq, inv = unique_gather(ids_a)
+    got = table[uniq][inv]
+    want = table[ids_a]
+    assert np.allclose(np.asarray(got), np.asarray(want))
+    # gather touches each distinct id exactly once among the used prefix
+    n_uniq = len(set(ids))
+    assert len(set(np.asarray(uniq)[:n_uniq].tolist())) == n_uniq
+
+
+@given(st.integers(1, 5), st.integers(3, 20),
+       st.lists(st.integers(0, 2 ** 32 - 1), min_size=1, max_size=100))
+@_SET
+def test_hash_positions_in_range(k, s_log, keys):
+    s = 2 ** s_log
+    seeds = derive_seeds(7, k)
+    pos = np.asarray(hash_positions(jnp.asarray(keys, jnp.uint32), seeds, s))
+    assert pos.shape == (len(keys), k)
+    assert (pos >= 0).all() and (pos < s).all()
+
+
+@given(st.integers(1, 64), st.lists(st.integers(0, 2 ** 32 - 1),
+                                    min_size=1, max_size=64))
+@_SET
+def test_route_hash_in_range(n_shards, keys):
+    r = np.asarray(route_hash(jnp.asarray(keys, jnp.uint32), n_shards, 3))
+    assert (r >= 0).all() and (r < n_shards).all()
+
+
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=500))
+@_SET
+def test_pack_roundtrip(bits):
+    arr = jnp.asarray([bits], jnp.uint8)
+    packed = pack_bits(arr)
+    assert np.array_equal(np.asarray(unpack_bits(packed, len(bits))),
+                          np.asarray(arr))
+    assert int(popcount(packed)[0]) == sum(bits)
+
+
+@given(st.lists(st.integers(0, 1023), min_size=1, max_size=100))
+@_SET
+def test_split_pos_reconstructs(positions):
+    pos = jnp.asarray(positions, jnp.int32)
+    w, m = split_pos(pos)
+    back = np.asarray(w) * 32 + np.log2(np.asarray(m)).astype(int)
+    assert np.array_equal(back, np.asarray(positions))
+
+
+@given(st.integers(100, 5000), st.floats(0.05, 0.95), st.integers(0, 10))
+@_SET
+def test_controlled_stream_exact_distinct_fraction(n, frac, seed):
+    from repro.data.streams import controlled_distinct_stream
+    keys, truth = controlled_distinct_stream(n, frac, seed)
+    n_distinct = len(np.unique(keys))
+    assert n_distinct == max(1, round(n * frac))
+    assert (~truth).sum() == n_distinct   # truth marks duplicates exactly

@@ -1,0 +1,81 @@
+"""Analytical model (core/theory.py) vs the paper's equations and the
+empirical engines."""
+
+import numpy as np
+import pytest
+
+from repro.core import DedupConfig, Dedup
+from repro.core.theory import (sbf_stable_fpr, standard_bloom_fpr,
+                               verify_monotone_convergence, x_series)
+from conftest import make_stream
+import jax.numpy as jnp
+
+
+@pytest.mark.parametrize("variant", ["rsbf", "bsbf", "bsbfsd", "rlbsbf"])
+def test_theorem_31_monotone_convergence(variant):
+    """Theorem 3.1 / Lemma 1: X monotonically increases toward 1 (RSBF's
+    phase-3 kicks in at s/p* ~ 91k, so it needs the longest horizon)."""
+    cfg = DedupConfig.for_variant(variant, memory_bits=1 << 13)
+    n = 250_000 if variant == "rsbf" else 60_000
+    r = verify_monotone_convergence(cfg, n=n)
+    assert r["monotone"] and r["bounded"]
+    assert r["final_X"] > 0.9
+
+
+def test_bsbf_recurrence_equals_explicit_sum():
+    """Eq. 4.2 (explicit sum/product) == Eq. 4.3 (recurrence)."""
+    cfg = DedupConfig.for_variant("bsbf", memory_bits=1 << 10)
+    s, k = float(cfg.s), cfg.k
+    n = 400
+    # explicit O(n^2) evaluation of Eq. 4.2
+    X = np.zeros(n + 2)
+    for m in range(1, n + 1):
+        total = 0.0
+        for l in range(1, m + 1):
+            prod = 1.0
+            for i in range(l + 1, m + 1):
+                prod *= X[i] + (1 - X[i]) * (1 - 1 / s)
+            total += (1 - X[l]) * (1 / s) * prod
+        X[m + 1] = total ** k
+    # curves.X[i] == X_{i+2} (the iteration emits X_{m+1} for m = 1..n)
+    curves = x_series(cfg, n + 1)
+    np.testing.assert_allclose(curves.X[:n], X[2:n + 2], rtol=2e-3,
+                               atol=1e-6)
+
+
+def test_bsbfsd_dominates_bsbf_in_X():
+    """Eq. 4.5's leak (1 - 1/(ks)) > Eq. 4.3's (1 - 1/s): single deletion
+    preserves more history => X converges faster => lower FNR."""
+    cfg_b = DedupConfig.for_variant("bsbf", memory_bits=1 << 12)
+    cfg_s = DedupConfig.for_variant("bsbfsd", memory_bits=1 << 12)
+    xb = x_series(cfg_b, 20_000).X
+    xs = x_series(cfg_s, 20_000).X
+    assert xs[-1] >= xb[-1]
+
+
+def test_theory_matches_empirical_fnr_trend():
+    """The paper's model and the measurement agree that BSBF has the worst
+    FNR of the three biased variants. (The full BSBFSD-vs-RLBSBF ordering is
+    where the paper's model and physical load equilibrium diverge — see
+    EXPERIMENTS.md §Theory — so only the robust part is asserted.)"""
+    keys, truth = make_stream(n=25_000, universe=6_000, seed=11)
+    theory_1mx, emp_fnr = {}, {}
+    for v in ("bsbf", "bsbfsd", "rlbsbf"):
+        cfg = DedupConfig.for_variant(v, memory_bits=1 << 14, batch_size=2048)
+        theory_1mx[v] = 1 - x_series(cfg, 25_000).X[-1]
+        d = Dedup(cfg)
+        _, dup = d.run_stream(d.init(), jnp.asarray(keys))
+        dup = np.asarray(dup)
+        emp_fnr[v] = (~dup & truth).sum() / truth.sum()
+    assert max(theory_1mx, key=theory_1mx.get) == "bsbf"
+    assert max(emp_fnr, key=emp_fnr.get) == "bsbf"
+
+
+def test_sbf_stable_fpr_hits_target():
+    cfg = DedupConfig.for_variant("sbf", memory_bits=1 << 20, fpr_t=0.1)
+    assert 0.01 < sbf_stable_fpr(cfg) <= 0.11
+
+
+def test_standard_bloom_fpr_sanity():
+    # classic: n=m/10, k=7 -> ~0.008
+    assert standard_bloom_fpr(n=1e5, m_bits=1e6, k=7) < 0.01
