@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Diff fresh throughput numbers against the committed BENCH_throughput.json.
+
+    PYTHONPATH=src python scripts/bench_check.py [--tol 0.25] [--update]
+
+Exit codes: 0 = within tolerance (or improved), 1 = regression, 2 = missing
+artifact. ``--update`` rewrites the artifact's ``current`` section with the
+fresh numbers (the ``baseline`` seed-engine section is never touched), so a
+PR that legitimately shifts perf can re-baseline its trajectory explicitly.
+
+The check compares elems/s per engine: fresh must be >= (1 - tol) * committed.
+The sequential oracle and interpret-mode Pallas rows are informational only —
+their wall-clock is dominated by python/interpreter overhead and jitters too
+much to gate on.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+GATED = ("batched_dense8", "batched_packed")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed fractional slowdown vs committed numbers")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the artifact's 'current' section")
+    args = ap.parse_args(argv)
+
+    from benchmarks.throughput import (BENCH_PATH, measure_engines,
+                                       write_bench_artifact)
+
+    if not os.path.exists(BENCH_PATH):
+        print(f"bench_check: no committed artifact at {BENCH_PATH} — run "
+              f"`python -m benchmarks.run --fast --only throughput` first")
+        return 2
+    with open(BENCH_PATH) as f:
+        committed = json.load(f)
+
+    fresh = measure_engines(fast=True)
+    fail = False
+    print(f"{'engine':28s} {'committed':>12s} {'fresh':>12s} {'ratio':>7s}")
+    for name, stats in fresh.items():
+        if not isinstance(stats, dict) or "eps" not in stats:
+            continue
+        ref = committed.get("current", {}).get(name, {}).get("eps")
+        if ref is None:
+            print(f"{name:28s} {'—':>12s} {stats['eps']:12.0f}   (new)")
+            continue
+        ratio = stats["eps"] / ref
+        status = ""
+        if name in GATED and ratio < 1.0 - args.tol:
+            status = "  REGRESSION"
+            fail = True
+        print(f"{name:28s} {ref:12.0f} {stats['eps']:12.0f} {ratio:6.2f}x"
+              f"{status}")
+        base = committed.get("baseline", {}).get(name, {}).get("eps")
+        if base and name in GATED:
+            print(f"{'':28s} vs seed baseline: {stats['eps'] / base:.2f}x")
+
+    if args.update:
+        import jax, time  # noqa: E401
+        path = write_bench_artifact(
+            fresh, meta={"fast": True, "backend": jax.default_backend(),
+                         "captured": time.strftime("%Y-%m-%d")})
+        print(f"updated {path}")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,14 +9,23 @@ Processes B stream elements per step:
   4. vectorized per-variant insert/delete decisions using per-element stream
      positions ``i_t = position + t``,
   5. one scatter pass: deletions from the snapshot first, then insertions
-     (insertions win — conservative w.r.t. false negatives).
+     (insertions win — conservative w.r.t. false negatives),
+  6. *exact incremental* load update from the scatter pre-values — an
+     O(B log B) event sort instead of an O(s) popcount over the filter
+     (DESIGN.md §3.1; ``cfg.debug_exact_load`` restores the full popcount).
 
 Divergence from the sequential oracle is bounded (deletions can't wipe
 same-batch insertions; RSBF may report a within-batch repeat of a *rejected*
-first occurrence as duplicate) and is measured in tests/benchmarks.
+first occurrence as duplicate) and is measured in tests/benchmarks
+(DESIGN.md §2).
 
 ``valid`` masks let ragged stream tails ride through fixed-shape jit steps as
 no-ops.
+
+The per-variant decision logic (``make_decision_fn``) and the randomness
+draws (``draw_randomness``) are factored out so the jnp path here and the
+fused Pallas kernel (``repro.kernels.fused_step``) trace the *same* code and
+stay bit-identical (DESIGN.md §3.4).
 """
 
 from __future__ import annotations
@@ -28,13 +37,23 @@ import jax.numpy as jnp
 
 from .config import DedupConfig
 from .hashing import derive_seeds, hash_positions
-from .packed import probe_packed, scatter_andnot, scatter_or, split_pos, popcount
+from .packed import (delta_from_sorted_positions, popcount, probe_packed,
+                     probe_sorted_packed, run_heads)
 from .state import FilterState
 
 
 class BatchResult(NamedTuple):
     dup: jnp.ndarray        # (B,) bool — reported duplicate
     inserted: jnp.ndarray   # (B,) bool — element was inserted into the filters
+
+
+class BatchRandomness(NamedTuple):
+    """Pre-drawn randomness for one batched step. Unused fields are zeros of
+    the right shape so both backends consume an identical pytree."""
+    del_pos: jnp.ndarray    # (B, k) int32 — candidate deletion positions
+    u_bern: jnp.ndarray     # (B,) f32    — RSBF phase-2 insertion bernoulli
+    u_aux: jnp.ndarray      # (B, k) f32  — RLBSBF per-filter deletion uniforms
+    which: jnp.ndarray      # (B,) int32  — BSBFSD's single chosen filter
 
 
 BatchedStep = Callable[[FilterState, jnp.ndarray, jnp.ndarray],
@@ -44,18 +63,123 @@ BatchedStep = Callable[[FilterState, jnp.ndarray, jnp.ndarray],
 def intra_batch_seen(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     """(B,) bool: True where an equal *valid* key occurs earlier in the batch.
 
-    Sort-based: stable argsort on (key, index) keeps original order within
-    equal keys, so "equal to predecessor in sorted order" == "has an earlier
-    occurrence". Invalid lanes are pushed to the end with a sentinel.
+    Value-free sort + rank join: XLA lowers a single-operand ``sort`` to a
+    fast vectorized kernel, while stable *argsort* (a two-operand comparator
+    sort) is several times slower on every backend — so instead of carrying
+    lane indices through the sort, each lane finds its key's rank with a
+    binary search and the earliest lane per key is elected with a B-sized
+    scatter-min (DESIGN.md §3.1). Invalid lanes share a sentinel key.
     """
     b = keys.shape[0]
     sk = jnp.where(valid, keys, jnp.uint32(0xFFFFFFFF))
-    order = jnp.argsort(sk, stable=True)
-    sorted_keys = sk[order]
-    dup_sorted = jnp.concatenate(
-        [jnp.zeros((1,), bool), sorted_keys[1:] == sorted_keys[:-1]])
-    seen = jnp.zeros((b,), bool).at[order].set(dup_sorted)
-    return seen & valid
+    sorted_k = jnp.sort(sk)
+    rank = jnp.searchsorted(sorted_k, sk, side="left").astype(jnp.int32)
+    lane = jnp.arange(b, dtype=jnp.int32)
+    winner = jnp.full((b,), b, jnp.int32).at[rank].min(lane)
+    return (winner[rank] != lane) & valid
+
+
+def draw_randomness(cfg: DedupConfig, rng: jax.Array, b: int
+                    ) -> Tuple[jax.Array, BatchRandomness]:
+    """Split the state rng and draw every random input of one batched step.
+
+    The split/draw order is frozen (it is part of the engine's determinism
+    contract — tests pin dup reports at fixed seed across refactors): one
+    4-way split, del_pos from r_del, then the variant's extra draws from the
+    same keys the original inline code used.
+    """
+    k, s = cfg.k, cfg.s
+    rng, r_ins, r_del, r_aux = jax.random.split(rng, 4)
+    del_pos = jax.random.randint(r_del, (b, k), 0, s, dtype=jnp.int32)
+    u_bern = (jax.random.uniform(r_ins, (b,))
+              if cfg.variant == "rsbf" else jnp.zeros((b,), jnp.float32))
+    u_aux = (jax.random.uniform(r_aux, (b, k))
+             if cfg.variant == "rlbsbf" else jnp.zeros((b, k), jnp.float32))
+    which = (jax.random.randint(r_aux, (b,), 0, k, dtype=jnp.int32)
+             if cfg.variant == "bsbfsd" else jnp.zeros((b,), jnp.int32))
+    return rng, BatchRandomness(del_pos, u_bern, u_aux, which)
+
+
+def make_decision_fn(cfg: DedupConfig):
+    """Pure per-variant decision logic, shared by the jnp step and the fused
+    Pallas kernel (traced inside the kernel — single source of truth).
+
+    decide(vals, valid, seen, i_t, load, rnd) ->
+        (dup (B,) bool, insert (B,) bool, del_mask (B, k) bool)
+    """
+    s, k = cfg.s, cfg.k
+
+    def decide(vals, valid, seen, i_t, load, rnd: BatchRandomness):
+        # iota, not jnp.arange: this traces inside the fused Pallas kernel,
+        # which rejects captured device-array constants
+        rows = jax.lax.iota(jnp.int32, k)
+        b = valid.shape[0]
+        filter_dup = jnp.all(vals == 1, axis=1)
+        dup = (filter_dup | seen) & valid
+        distinct = valid & ~dup
+        if cfg.variant == "rsbf":
+            p_ins = jnp.float32(s) / i_t.astype(jnp.float32)
+            ph1 = i_t <= s
+            ph3 = p_ins <= cfg.p_star
+            bern = rnd.u_bern < p_ins
+            insert = jnp.where(
+                ph1, valid,
+                jnp.where(ph3, distinct, distinct & bern))
+            ph2_del = ((~ph1) & (~ph3) & insert)[:, None]
+            ph3_del = (ph3 & insert)[:, None] & (vals == 0)
+            del_mask = jnp.where(ph3[:, None], ph3_del,
+                                 jnp.broadcast_to(ph2_del, (b, k)))
+        elif cfg.variant == "bsbf":
+            insert = distinct
+            del_mask = jnp.broadcast_to(insert[:, None], (b, k))
+        elif cfg.variant == "bsbfsd":
+            insert = distinct
+            del_mask = insert[:, None] & (rnd.which[:, None] == rows[None, :])
+        elif cfg.variant == "rlbsbf":
+            insert = distinct
+            p_del = load.astype(jnp.float32)[None, :] / jnp.float32(s)
+            del_mask = insert[:, None] & (rnd.u_aux < p_del)
+        else:
+            raise ValueError(cfg.variant)
+        return dup, insert, del_mask
+
+    return decide
+
+
+def sorted_enabled_positions(pos: jnp.ndarray, mask: jnp.ndarray,
+                             sentinel: int) -> jnp.ndarray:
+    """(B, k) positions + enable mask -> (k, B) ascending per row; disabled
+    lanes carry ``sentinel`` (> any real position) and sort to the end.
+
+    A *value-free* single-operand sort — everything downstream (delta words,
+    pre-values, first-occurrence flags) is recomputed from the sorted
+    positions instead of permuted alongside them, because multi-operand
+    sorts hit XLA's slow comparator path (DESIGN.md §3.1/§3.2).
+    """
+    return jnp.sort(jnp.where(mask, pos, sentinel).T, axis=-1)
+
+
+def load_delta_from_sorted(spi: jnp.ndarray, pre_i: jnp.ndarray,
+                           spd: jnp.ndarray, pre_d: jnp.ndarray,
+                           post_d: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Exact per-row load delta of the batched update R = (A & ~D) | I.
+
+    spi / spd: (k, B) *sorted* insert / delete positions (sentinel >= s for
+    disabled lanes); pre_*: the corresponding PRE-update bit values {0,1};
+    post_d: the POST-update bits at the delete positions. Intra-batch
+    duplicate positions count once (run heads of the sorted arrays). A bit
+    both deleted and inserted nets the insert — since deletes apply before
+    inserts, a deleted position ends at R[p] = I[p], so ``post_d`` IS the
+    "was it re-inserted" flag: one O(B) gather replaces a sorted-set join.
+    O(B log B) total, no O(s) reduce over the filter (DESIGN.md §3.1).
+    """
+    gained = jnp.sum(
+        jnp.where(run_heads(spi) & (spi < s), 1 - pre_i.astype(jnp.int32), 0),
+        axis=-1)
+    lost = jnp.sum(
+        jnp.where(run_heads(spd) & (spd < s) & (post_d == 0),
+                  pre_d.astype(jnp.int32), 0), axis=-1)
+    return (gained - lost).astype(jnp.int32)
 
 
 def make_batched_step(cfg: DedupConfig) -> BatchedStep:
@@ -88,6 +212,8 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
             set_pos = jnp.where(valid[:, None], pos, s)
             bits = bits.at[0, set_pos.reshape(-1)].set(jnp.uint8(cmax),
                                                        mode="drop")
+            # counters decay by runs of P — no cheap per-bit delta exists, so
+            # the SBF *baseline* keeps the O(s) recount (DESIGN.md §3.1)
             load = jnp.array([(bits[0] > 0).sum(dtype=jnp.int32)])
             n_valid = valid.sum(dtype=jnp.int32)
             new = FilterState(bits, state.position + n_valid, load, rng)
@@ -96,22 +222,37 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
         return step
 
     # ---------------- 1-bit variants ------------------------------------ //
+    if cfg.backend == "pallas":
+        from ..kernels.fused_step import make_fused_batched_step
+        return make_fused_batched_step(cfg)
+
+    decide = make_decision_fn(cfg)
+    # sentinel for disabled lanes: beyond the filter AND in word W (so the
+    # packed delta scatter drops it) — 32*ceil(s/32), not s, because s's own
+    # word can be W-1 when 32 does not divide s
+    sentinel = 32 * ((s + 31) // 32)
+
     def probe(bits, pos):
         if cfg.packed:
             return probe_packed(bits, pos)                        # (B, k)
         return bits[rows[None, :], pos]
 
-    def apply_updates(bits, pos, ins_mask, del_pos, del_mask):
-        """Deletions (snapshot) then insertions. (B,k) ins/del masks."""
+    def probe_sorted(bits, sp):
+        """Row-aligned probe of (k, B) sorted positions; sentinels clamp and
+        must be masked by the caller (load_delta_from_sorted does)."""
+        if cfg.packed:
+            return probe_sorted_packed(bits, sp)
+        return bits[rows[:, None], jnp.minimum(sp, s - 1)]
+
+    def apply_updates(bits, pos, ins_mask, del_pos, del_mask, spi, spd):
+        """Deletions from the snapshot, then insertions (insertions win):
+        R = (A & ~D) | I. Packed builds both deltas from the already-sorted
+        positions and applies them in ONE elementwise pass."""
         if cfg.packed:
             W = bits.shape[1]
-            dw, dm = split_pos(del_pos)
-            dw = jnp.where(del_mask, dw, W)
-            bits = scatter_andnot(bits, dw, dm)
-            iw, im = split_pos(pos)
-            iw = jnp.where(ins_mask, iw, W)
-            bits = scatter_or(bits, iw, im)
-            return bits
+            delta_i = delta_from_sorted_positions(spi, W)
+            delta_d = delta_from_sorted_positions(spd, W)
+            return (bits & ~delta_d) | delta_i
         dp = jnp.where(del_mask, del_pos, s)
         bits = bits.at[rows[None, :], dp].set(0, mode="drop")
         ip = jnp.where(ins_mask, pos, s)
@@ -119,6 +260,7 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
         return bits
 
     def recompute_load(bits):
+        # debug escape hatch only — O(s) reduce over the whole filter
         if cfg.packed:
             return popcount(bits)
         return bits.astype(jnp.int32).sum(axis=1)
@@ -127,44 +269,23 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
         b = keys.shape[0]
         pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)                      # (B, k)
         vals = probe(state.bits, pos)                             # (B, k)
-        filter_dup = jnp.all(vals == 1, axis=1)
         seen = intra_batch_seen(keys, valid)
-        dup = (filter_dup | seen) & valid
-        distinct = valid & ~dup
-        rng, r_ins, r_del, r_aux = jax.random.split(state.rng, 4)
-        del_pos = jax.random.randint(r_del, (b, k), 0, s, dtype=jnp.int32)
-
-        if cfg.variant == "rsbf":
-            i_t = state.position + jnp.arange(b, dtype=jnp.int32)
-            p_ins = jnp.float32(s) / i_t.astype(jnp.float32)
-            ph1 = i_t <= s
-            ph3 = p_ins <= cfg.p_star
-            bern = jax.random.uniform(r_ins, (b,)) < p_ins
-            insert = jnp.where(
-                ph1, valid,
-                jnp.where(ph3, distinct, distinct & bern))
-            ph2_del = ((~ph1) & (~ph3) & insert)[:, None]
-            ph3_del = (ph3 & insert)[:, None] & (vals == 0)
-            del_mask = jnp.where(ph3[:, None], ph3_del,
-                                 jnp.broadcast_to(ph2_del, (b, k)))
-        elif cfg.variant == "bsbf":
-            insert = distinct
-            del_mask = jnp.broadcast_to(insert[:, None], (b, k))
-        elif cfg.variant == "bsbfsd":
-            insert = distinct
-            which = jax.random.randint(r_aux, (b,), 0, k, dtype=jnp.int32)
-            del_mask = insert[:, None] & (which[:, None] == rows[None, :])
-        elif cfg.variant == "rlbsbf":
-            insert = distinct
-            u = jax.random.uniform(r_aux, (b, k))
-            p_del = state.load.astype(jnp.float32)[None, :] / jnp.float32(s)
-            del_mask = insert[:, None] & (u < p_del)
-        else:
-            raise ValueError(cfg.variant)
-
+        i_t = state.position + jnp.arange(b, dtype=jnp.int32)
+        rng, rnd = draw_randomness(cfg, state.rng, b)
+        dup, insert, del_mask = decide(vals, valid, seen, i_t, state.load, rnd)
         ins_mask = jnp.broadcast_to(insert[:, None], (b, k))
-        bits = apply_updates(state.bits, pos, ins_mask, del_pos, del_mask)
-        load = recompute_load(bits)
+        spi = sorted_enabled_positions(pos, ins_mask, sentinel)
+        spd = sorted_enabled_positions(rnd.del_pos, del_mask, sentinel)
+        bits = apply_updates(state.bits, pos, ins_mask, rnd.del_pos, del_mask,
+                             spi, spd)
+        if cfg.debug_exact_load:
+            load = recompute_load(bits)
+        else:
+            pre_i = probe_sorted(state.bits, spi)                 # pre-update
+            pre_d = probe_sorted(state.bits, spd)
+            post_d = probe_sorted(bits, spd)                      # post-update
+            load = state.load + load_delta_from_sorted(
+                spi, pre_i, spd, pre_d, post_d, s)
         n_valid = valid.sum(dtype=jnp.int32)
         new = FilterState(bits, state.position + n_valid, load, rng)
         return new, BatchResult(dup=dup, inserted=insert)

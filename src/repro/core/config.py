@@ -71,9 +71,15 @@ class DedupConfig:
     # --- engine knobs ---
     batch_size: int = 8192               # batched-engine width
     packed: bool = False                 # uint32-packed words vs uint8/bit
+    backend: str = "jnp"                 # "jnp" | "pallas" — batched-step impl
+                                         # (pallas = fused single-launch kernel,
+                                         # packed 1-bit variants only; DESIGN §3.4)
     block_bits: int = 0                  # >0: blocked layout, 2^b-bit blocks
                                          # (VMEM-tile locality; DESIGN §3.3)
     delete_set_bits_only: bool = False   # phase-3 RSBF "find a set bit" (scan engine)
+    debug_exact_load: bool = False       # recompute load by full popcount each
+                                         # step (O(s) — test escape hatch only;
+                                         # default is exact incremental O(B))
     # --- distribution ---
     shards: int = 1                      # key-space partitions (devices)
 
@@ -125,6 +131,10 @@ class DedupConfig:
             raise ValueError("filter too small: raise memory_bits or lower k/shards")
         if not (0.0 < self.p_star < 1.0):
             raise ValueError("p_star in (0,1)")
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(f"backend {self.backend!r}; one of ('jnp', 'pallas')")
+        if self.backend == "pallas" and (not self.packed or self.variant == "sbf"):
+            raise ValueError("pallas backend requires packed=True and a 1-bit variant")
         return self
 
     @staticmethod

@@ -10,6 +10,15 @@
 All entry points are functionally pure: state in, state out — which is what
 lets the same engine run under pjit/shard_map (see repro.dedup.sharded) and be
 checkpointed mid-stream (see repro.checkpoint).
+
+Compile caching (DESIGN.md §3.5): every jitted callable is built once in
+``__init__`` and reused across calls — ``run_stream`` re-running the same
+stream length never re-traces (regression-tested via ``stream_cache_size``).
+``run_stream`` additionally *donates* the input state, so XLA aliases the
+k·s-bit filter buffer in place across the whole scan instead of copying it:
+do not reuse a state object after passing it to ``run_stream`` (thread the
+returned state instead, as every call site here does). ``process`` does NOT
+donate — interactive callers commonly probe a state and keep it.
 """
 
 from __future__ import annotations
@@ -29,9 +38,11 @@ from .variants import make_scan_step
 class Dedup:
     def __init__(self, cfg: DedupConfig):
         self.cfg = cfg.validate()
-        self._batched = jax.jit(make_batched_step(cfg))
+        self._step = make_batched_step(cfg)
+        self._batched = jax.jit(self._step)
         if not cfg.packed:
             self._scan_step = make_scan_step(cfg)
+        self._stream = jax.jit(self._stream_impl, donate_argnums=0)
 
     # ------------------------------------------------------------------ //
     def init(self, seed: int | None = None) -> FilterState:
@@ -46,10 +57,22 @@ class Dedup:
         return self._batched(state, keys.astype(jnp.uint32), valid)
 
     # ------------------------------------------------------------------ //
+    def _stream_impl(self, state: FilterState, kb: jnp.ndarray,
+                     vb: jnp.ndarray):
+        def body(st, xs):
+            kk, vv = xs
+            st, res = self._step(st, kk, vv)
+            return st, res.dup
+
+        return jax.lax.scan(body, state, (kb, vb))
+
     def run_stream(self, state: FilterState, keys: jnp.ndarray
                    ) -> Tuple[FilterState, jnp.ndarray]:
         """Batched engine over a whole (N,) stream via lax.scan; tail padded
-        with invalid lanes. Returns per-element duplicate reports."""
+        with invalid lanes. Returns per-element duplicate reports.
+
+        The input ``state`` is donated (updated in place) — use the returned
+        state afterwards, never the argument."""
         b = self.cfg.batch_size
         n = keys.shape[0]
         n_pad = (-n) % b
@@ -57,15 +80,13 @@ class Dedup:
         valid = jnp.pad(jnp.ones((n,), bool), (0, n_pad))
         kb = keys_p.reshape(-1, b)
         vb = valid.reshape(-1, b)
-        step = make_batched_step(self.cfg)
-
-        def body(st, xs):
-            kk, vv = xs
-            st, res = step(st, kk, vv)
-            return st, res.dup
-
-        state, dups = jax.lax.scan(body, state, (kb, vb))
+        state, dups = self._stream(state, kb, vb)
         return state, dups.reshape(-1)[:n]
+
+    def stream_cache_size(self) -> int:
+        """Number of compiled specializations of the stream scan (one per
+        distinct stream length) — used by the no-recompile regression test."""
+        return self._stream._cache_size()
 
     def run_stream_oracle(self, state: FilterState, keys: jnp.ndarray
                           ) -> Tuple[FilterState, jnp.ndarray]:
@@ -83,5 +104,9 @@ def _cached_engine(cfg: DedupConfig) -> Dedup:
 
 
 def get_engine(cfg: DedupConfig) -> Dedup:
-    """Engines are stateless w.r.t. streams; cache by (frozen) config."""
+    """Engines are stateless w.r.t. streams and cache their jitted callables,
+    so they are shared: keyed on the *frozen* ``DedupConfig`` dataclass (all
+    fields participate in __eq__/__hash__ — two configs differing in any
+    engine knob get distinct engines; equal configs reuse one engine and its
+    compiled steps)."""
     return _cached_engine(cfg)

@@ -4,10 +4,11 @@ TPUs have no efficient random single-bit scatter; the packed layout stores 32
 bits per lane word and performs:
 
   * probe:   word gather (lowers to dynamic-slice) + mask test
-  * set/clear scatter: per-bit decomposition + ``.at[].max`` scatter —
-    max-accumulation of {0,1} per bit *is* bitwise OR across duplicate word
-    indices, which makes the batched update a single XLA scatter instead of a
-    read-modify-write loop.
+  * set/clear scatter: sort the batch's word indices, OR together the
+    single-bit masks of each equal-index run with one segmented scan, and
+    scatter exactly one uint32 per touched word (``_bit_delta_rows``). This is
+    O(B log B) work and O(B) scatter entries — no per-bit decomposition, no
+    (B·k, 32) uint8 intermediate (DESIGN.md §3.2).
 
 The Pallas kernels in ``repro.kernels`` implement the same contracts with
 explicit VMEM tiling; these jnp forms are their oracles and the fallback path.
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "pack_bits", "unpack_bits", "split_pos", "probe_packed",
+    "delta_from_sorted_positions", "probe_sorted_packed",
     "scatter_or", "scatter_andnot", "popcount",
 ]
 
@@ -61,40 +63,100 @@ def probe_packed(words: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
     return ((got & mask) != 0).astype(jnp.uint8)
 
 
-def _bit_delta(w_shape, w_idx, mask):
-    """Accumulate single-bit masks into a packed delta via per-bit scatter-max.
+def _segmented_or(head: jnp.ndarray, vals: jnp.ndarray):
+    """Inclusive segmented OR-scan along the last axis.
 
-    w_idx (..., ) int32 flat word indices into a (W,) row; mask (...,) uint32
-    single-bit masks. Returns (W,) uint32 with the OR of all masks per word.
+    head (..., n) bool — True where a new segment starts; vals (..., n)
+    uint32. Returns (..., n) uint32 where each element is the OR of its
+    segment's prefix. The standard segmented-scan monoid is associative, so
+    this lowers to log2(n) vector passes.
     """
-    W = w_shape
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = ((mask[..., None] >> shifts) & _BIT).astype(jnp.uint8)  # (..., 32)
-    flat_idx = w_idx.reshape(-1)
-    flat_bits = bits.reshape(-1, 32)
-    acc = jnp.zeros((W, 32), dtype=jnp.uint8).at[flat_idx].max(
-        flat_bits, mode="drop")                   # max over dup idx == OR
-    weights = (_BIT << shifts).astype(jnp.uint32)
-    return (acc.astype(jnp.uint32) * weights).sum(axis=-1, dtype=jnp.uint32)
+    def comb(a, b):
+        ha, va = a
+        hb, vb = b
+        return ha | hb, jnp.where(hb, vb, va | vb)
+
+    _, acc = jax.lax.associative_scan(comb, (head, vals), axis=-1)
+    return acc
+
+
+def run_heads(sp: jnp.ndarray) -> jnp.ndarray:
+    """(k, B) sorted -> True at the first element of each equal-value run."""
+    k = sp.shape[0]
+    return jnp.concatenate(
+        [jnp.ones((k, 1), bool), sp[:, 1:] != sp[:, :-1]], axis=1)
+
+
+def _scatter_run_or(sw: jnp.ndarray, sm: jnp.ndarray, W: int) -> jnp.ndarray:
+    """(k, B) *sorted* word indices + aligned masks -> (k, W) uint32 delta:
+    segmented-OR each equal-index run, scatter one word per run tail.
+    Indices >= W (disabled-lane sentinels) are dropped by the scatter."""
+    k = sw.shape[0]
+    head = run_heads(sw)
+    acc = _segmented_or(head, sm)
+    tail = jnp.concatenate(
+        [sw[:, :-1] != sw[:, 1:], jnp.ones((k, 1), bool)], axis=1)
+    idx = jnp.where(tail, sw, W)                             # non-tails dropped
+    rows = jnp.arange(k, dtype=jnp.int32)[:, None]
+    return jnp.zeros((k, W), jnp.uint32).at[rows, idx].set(
+        jnp.where(tail, acc, jnp.uint32(0)), mode="drop")
+
+
+def _bit_delta_rows(W: int, w_idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-row OR-union of single-bit masks: (B, k) -> (k, W) uint32 delta.
+
+    Sort each row's word indices, segmented-OR the masks of equal-index runs,
+    then scatter one word per run tail. Disabled lanes use w_idx >= W and are
+    dropped by the scatter. O(B log B) sort + O(B) scatter — the load-bearing
+    replacement for the per-bit (B, 32) expansion (DESIGN.md §3.2).
+    """
+    k = w_idx.shape[-1]
+    wT = w_idx.reshape(-1, k).T                              # (k, B)
+    mT = mask.reshape(-1, k).T
+    order = jnp.argsort(wT, axis=-1)
+    sw = jnp.take_along_axis(wT, order, axis=-1)
+    sm = jnp.take_along_axis(mT, order, axis=-1)
+    return _scatter_run_or(sw, sm, W)
+
+
+def delta_from_sorted_positions(sp: jnp.ndarray, W: int) -> jnp.ndarray:
+    """(k, B) *sorted* bit positions -> (k, W) uint32 OR-union delta.
+
+    Word indices and single-bit masks are derived from the already-sorted
+    positions (so word runs are contiguous for free — no argsort, no
+    permutation), OR-combined per word run with one segmented scan, and
+    scattered one uint32 per touched word. Disabled lanes must carry a
+    sentinel position >= 32*W: their word index lands at W and the scatter
+    drops it. This is the hot-path delta builder (DESIGN.md §3.2).
+    """
+    sw = (sp >> 5).astype(jnp.int32)                         # sentinel -> >= W
+    sm = (_BIT << (sp & 31).astype(jnp.uint32)).astype(jnp.uint32)
+    return _scatter_run_or(sw, sm, W)
+
+
+def probe_sorted_packed(words: jnp.ndarray, sp: jnp.ndarray) -> jnp.ndarray:
+    """Row-aligned probe: words (k, W), sp (k, B) positions (row f probes its
+    own row — unlike ``probe_packed``'s (B, k) element-major layout).
+    Sentinel positions read a clamped word; mask the result with ``sp < s``.
+    """
+    k, W = words.shape
+    rows = jnp.arange(k, dtype=jnp.int32)[:, None]
+    sw = jnp.minimum((sp >> 5).astype(jnp.int32), W - 1)
+    got = words[rows, sw]
+    return ((got >> (sp & 31).astype(jnp.uint32)) & _BIT).astype(jnp.uint8)
 
 
 def scatter_or(words: jnp.ndarray, w_idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Set bits: words (k, W); w_idx/mask (..., k). Out-of-range idx drop
     (used to express per-element enable masks)."""
-    k, W = words.shape
-    deltas = []
-    for f in range(k):  # k is tiny (1..5) and static — unrolled
-        deltas.append(_bit_delta(W, w_idx[..., f], mask[..., f]))
-    return words | jnp.stack(deltas)
+    _, W = words.shape
+    return words | _bit_delta_rows(W, w_idx, mask)
 
 
 def scatter_andnot(words: jnp.ndarray, w_idx: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Clear bits (same contract as scatter_or)."""
-    k, W = words.shape
-    deltas = []
-    for f in range(k):
-        deltas.append(_bit_delta(W, w_idx[..., f], mask[..., f]))
-    return words & ~jnp.stack(deltas)
+    _, W = words.shape
+    return words & ~_bit_delta_rows(W, w_idx, mask)
 
 
 def popcount(words: jnp.ndarray) -> jnp.ndarray:

@@ -17,7 +17,14 @@ import numpy as np
 
 @dataclasses.dataclass
 class StreamMetrics:
-    """Host-side accumulator; feed per-batch reports."""
+    """Streaming accumulator; feed per-batch reports.
+
+    Device-friendly: ``update`` only *accumulates* — when given jax arrays it
+    issues device-side adds and stores device scalars, never forcing a host
+    sync inside the ingest loop. The transfer happens once, lazily, when a
+    property / ``summary()`` / convergence query reads the counters back
+    (DESIGN.md §6). Plain numpy inputs keep working and stay host-side.
+    """
 
     n: int = 0
     true_distinct: int = 0
@@ -27,38 +34,78 @@ class StreamMetrics:
     overflow: int = 0
     _t0: float = dataclasses.field(default_factory=time.perf_counter)
     load_history: list = dataclasses.field(default_factory=list)
+    # per-batch device sums, folded into the (arbitrary-precision) python int
+    # counters at read-out — a long-lived device scalar accumulator would
+    # silently wrap at int32
+    _pending: list = dataclasses.field(default_factory=list)
+    _FOLD_EVERY = 512
 
     def update(self, reported_dup: np.ndarray, truth_dup: Optional[np.ndarray],
                load: Optional[np.ndarray] = None, s_bits: Optional[int] = None,
                overflow: int = 0) -> None:
-        reported_dup = np.asarray(reported_dup)
-        self.n += int(reported_dup.size)
+        if not hasattr(reported_dup, "sum"):      # plain sequences accepted
+            reported_dup = np.asarray(reported_dup)
+        self.n += int(np.prod(reported_dup.shape))   # static shape — no sync
         self.overflow += int(overflow)
         if truth_dup is not None:
-            truth_dup = np.asarray(truth_dup)
-            self.true_distinct += int((~truth_dup).sum())
-            self.true_duplicate += int(truth_dup.sum())
-            self.false_pos += int((reported_dup & ~truth_dup).sum())
-            self.false_neg += int((~reported_dup & truth_dup).sum())
+            if not hasattr(truth_dup, "sum"):
+                truth_dup = np.asarray(truth_dup)
+            not_truth = ~truth_dup
+            # device (or numpy) batch sums; transferred at read-out or when
+            # the buffer fills (bounds memory on read-free ingest loops —
+            # one amortized sync per _FOLD_EVERY batches)
+            self._pending.append((
+                not_truth.sum(), truth_dup.sum(),
+                (reported_dup & not_truth).sum(),
+                (~reported_dup & truth_dup).sum()))
+            if len(self._pending) >= self._FOLD_EVERY:
+                self._fold()
         if load is not None and s_bits:
-            self.load_history.append(float(np.sum(load)) / float(s_bits))
+            if not hasattr(load, "sum"):
+                load = np.asarray(load)
+            self.load_history.append(load.sum() / s_bits)
+            # same cadence as _pending: don't hold unbounded device scalars
+            # across a read-free ingest loop
+            if len(self.load_history) % self._FOLD_EVERY == 0:
+                self._loads()
 
-    # -- the paper's headline numbers ---------------------------------- //
+    def _fold(self) -> None:
+        """Drain the deferred per-batch sums into the python-int counters."""
+        for td, tdup, fp, fn in self._pending:
+            self.true_distinct += int(td)
+            self.true_duplicate += int(tdup)
+            self.false_pos += int(fp)
+            self.false_neg += int(fn)
+        self._pending.clear()
+
+    # -- the paper's headline numbers (sync happens here, not in update) - //
     @property
     def fpr(self) -> float:
+        self._fold()
         return self.false_pos / max(1, self.true_distinct)
 
     @property
     def fnr(self) -> float:
+        self._fold()
         return self.false_neg / max(1, self.true_duplicate)
 
     @property
     def throughput(self) -> float:
         return self.n / max(1e-9, time.perf_counter() - self._t0)
 
+    def _loads(self) -> list:
+        """Materialize the load curve (deferred device->host transfer). The
+        *last* entry is the staleness check: reads can interleave with
+        updates, so the tail may hold device scalars after an earlier read
+        already converted the head."""
+        h = self.load_history
+        if h and not isinstance(h[-1], float):
+            self.load_history = h = [float(x) for x in h]
+        return h
+
     def converged(self, window: int = 16, tol: float = 5e-3) -> bool:
         """Stability per Fig. 11: the normalized load's recent range < tol."""
-        h = self.load_history
+        h = self._loads()
         if len(h) < window:
             return False
         recent = h[-window:]
@@ -67,7 +114,7 @@ class StreamMetrics:
     def convergence_point(self, window: int = 16, tol: float = 5e-3
                           ) -> Optional[int]:
         """Index (in batches) where the load first stabilizes."""
-        h = self.load_history
+        h = self._loads()
         for i in range(window, len(h) + 1):
             r = h[i - window:i]
             if max(r) - min(r) < tol:
@@ -75,11 +122,12 @@ class StreamMetrics:
         return None
 
     def summary(self) -> dict:
+        loads = self._loads()
         return {
             "n": self.n, "fpr": self.fpr, "fnr": self.fnr,
             "overflow": self.overflow,
             "throughput_eps": self.throughput,
-            "final_load": self.load_history[-1] if self.load_history else None,
+            "final_load": loads[-1] if loads else None,
             "convergence_batch": self.convergence_point(),
         }
 

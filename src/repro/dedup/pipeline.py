@@ -76,9 +76,12 @@ class DedupPipeline:
             dup_w = 0.0 if self.mode == "drop" else self.duplicate_weight
             w = jnp.where(dup, jnp.float32(dup_w), jnp.float32(1.0))
         if self.track_metrics:
+            # device-side accumulation — no np.asarray here: forcing a host
+            # sync per batch serializes the ingest loop against the device.
+            # StreamMetrics transfers once, at read-out (DESIGN.md §6).
             self.metrics.update(
-                np.asarray(dup), truth_dup,
-                load=np.asarray(self.state.load), s_bits=self.cfg.s * self.cfg.k)
+                dup, truth_dup,
+                load=self.state.load, s_bits=self.cfg.s * self.cfg.k)
         return DedupBatch(data=batch, keys=keys, dup=dup, weights=w)
 
     def __call__(self, stream: Iterable[dict]) -> Iterator[DedupBatch]:

@@ -3,6 +3,9 @@
 hashmix       — fused k-way murmur hashing (VPU elementwise)
 bloom_probe   — packed-filter gather + bit test, filter row VMEM-resident
 scatter_delta — compare-broadcast packed bit scatter (OR / AND-NOT deltas)
+fused_step    — the production path: probe + decide + ANDNOT + OR + load
+                delta in ONE pallas_call with the filter VMEM-resident and
+                aliased in place (selected via ``DedupConfig.backend=\"pallas\"``)
 
 ``ops`` holds the jitted wrappers (interpret=True off-TPU), ``ref`` the
 pure-jnp oracles the tests sweep against.
@@ -12,5 +15,7 @@ from . import ops, ref
 from .hashmix import hashmix
 from .bloom_probe import bloom_probe
 from .scatter_delta import scatter_delta
+from .fused_step import make_fused_batched_step
 
-__all__ = ["ops", "ref", "hashmix", "bloom_probe", "scatter_delta"]
+__all__ = ["ops", "ref", "hashmix", "bloom_probe", "scatter_delta",
+           "make_fused_batched_step"]

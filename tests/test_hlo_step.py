@@ -1,0 +1,120 @@
+"""HLO-level contracts of the batched hot path (DESIGN.md §3):
+
+  * steady-state step for rlbsbf packed contains NO O(s) popcount/reduce over
+    the filter buffer — load is tracked incrementally from scatter pre-values;
+  * the donated filter state is aliased in place by the stream scan;
+  * repeated ``run_stream`` calls reuse the cached compiled scan (no
+    re-trace/re-compile per invocation).
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Dedup, DedupConfig
+from repro.core.batched import make_batched_step
+from repro.core.engine import get_engine
+from repro.core.state import init_state
+
+CFG = dict(memory_bits=1 << 21, batch_size=8192, packed=True)
+
+
+def _compiled_step_hlo(cfg):
+    step = jax.jit(make_batched_step(cfg))
+    st = init_state(cfg)
+    args = (st, jax.ShapeDtypeStruct((cfg.batch_size,), jnp.uint32),
+            jax.ShapeDtypeStruct((cfg.batch_size,), jnp.bool_))
+    return step.lower(*args).compile().as_text()
+
+
+def _reduce_input_dims(hlo: str):
+    """Max dimension among operands of every reduce-class op in the HLO."""
+    dims = []
+    for line in hlo.splitlines():
+        if re.search(r"=\s*\S+\s+reduce(-window)?\(", line):
+            # operand shapes appear as dtype[d0,d1,...] inside the call args
+            call = line.split("reduce", 1)[1]
+            for shape in re.findall(r"\w+\[([0-9,]*)\]", call):
+                if shape:
+                    dims.extend(int(d) for d in shape.split(","))
+    return dims
+
+
+def test_no_filter_sized_reduce_in_steady_state_step():
+    """The acceptance bar: compiled rlbsbf-packed step must not reduce over
+    any buffer as large as the filter (W words per row)."""
+    cfg = DedupConfig.for_variant("rlbsbf", **CFG)
+    w = cfg.s_words
+    assert w > cfg.batch_size          # thresholds separated by construction
+    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
+    big = [d for d in dims if d >= w]
+    assert not big, f"O(s) reduction over the filter crept back in: {big}"
+
+
+def test_debug_exact_load_does_popcount_reduce():
+    """Sanity of the detector: the escape hatch DOES reduce over the filter."""
+    cfg = DedupConfig.for_variant("rlbsbf", debug_exact_load=True, **CFG)
+    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
+    assert any(d >= cfg.s_words for d in dims)
+
+
+def test_dense8_step_has_no_filter_sized_reduce():
+    cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 21,
+                                  batch_size=8192)
+    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
+    assert not [d for d in dims if d >= cfg.s]
+
+
+def test_stream_donates_and_aliases_filter_state():
+    """run_stream's jitted scan declares the state buffers donated (aliased
+    to outputs) — the k·s-bit filter is updated in place, not copied."""
+    cfg = DedupConfig.for_variant("rlbsbf", **CFG)
+    d = Dedup(cfg)
+    st = d.init()
+    kb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.uint32)
+    vb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.bool_)
+    lowered = d._stream.lower(st, kb, vb).as_text()
+    # the uint32 filter argument must carry an output alias annotation
+    m = re.search(
+        rf"%arg0: tensor<{cfg.k}x{cfg.s_words}xui32>\s*\{{([^}}]*)\}}",
+        lowered)
+    assert m is not None and "tf.aliasing_output" in m.group(1), (
+        "filter state is not donated/aliased in the stream scan")
+    compiled = d._stream.lower(st, kb, vb).compile().as_text()
+    assert "input_output_alias" in compiled
+
+
+def test_run_stream_does_not_recompile():
+    """Engine asymmetry regression (DESIGN.md §3.5): same-shape streams must
+    reuse one compiled executable; get_engine shares engines per frozen cfg."""
+    cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 14,
+                                  batch_size=256)
+    d = get_engine(cfg)
+    assert get_engine(DedupConfig.for_variant(
+        "rlbsbf", memory_bits=1 << 14, batch_size=256)) is d
+    keys = jnp.asarray(np.random.default_rng(0)
+                       .integers(0, 1000, 1024).astype(np.uint32))
+    base = d.stream_cache_size()
+    st, _ = d.run_stream(d.init(), keys)
+    after_one = d.stream_cache_size()
+    st2, _ = d.run_stream(d.init(), keys)
+    assert d.stream_cache_size() == after_one == base + 1
+    # a different padded length is a new specialization — exactly one more
+    _ = d.run_stream(d.init(), keys[:700])
+    assert d.stream_cache_size() == base + 2
+
+
+def test_process_does_not_donate_state():
+    """process() must keep the argument state alive (interactive use): the
+    same state can be processed twice."""
+    cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 14,
+                                  batch_size=128)
+    d = Dedup(cfg)
+    st = d.init()
+    keys = jnp.arange(128, dtype=jnp.uint32)
+    _ = d.process(st, keys)
+    _st2, res = d.process(st, keys)            # st still usable
+    assert np.asarray(res.dup).shape == (128,)

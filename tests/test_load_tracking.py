@@ -1,0 +1,94 @@
+"""Property: the incrementally tracked ``state.load`` equals an exact
+popcount of the filter after mixed-distribution streams — for every variant
+x {dense8, packed} x {jnp, pallas-interpret}, including ragged ``valid``
+tails and heavy intra-batch key collisions (DESIGN.md §3.1).
+
+Deterministic sweeps (no hypothesis dependency): the adversarial structure
+is explicit — tiny universes force intra-batch duplicate positions, tiny
+filters force insert/delete position collisions, ragged tails exercise the
+sentinel paths.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Dedup, DedupConfig, VARIANTS
+from repro.core.packed import popcount
+
+
+def _exact_load(state, variant):
+    bits = np.asarray(state.bits)
+    if state.is_packed:
+        return np.asarray(popcount(state.bits))
+    if variant == "sbf":
+        return (bits > 0).sum(axis=1)
+    return bits.astype(np.int64).sum(axis=1)
+
+
+def _streams(seed):
+    """Mixed distributions: uniform, heavy-duplicate zipf-ish, burst-repeat
+    (maximal intra-batch collisions), and a ragged tail for each."""
+    r = np.random.default_rng(seed)
+    uniform = r.integers(0, 50_000, 2000).astype(np.uint32)
+    heavy = r.integers(0, 60, 2000).astype(np.uint32)        # tiny universe
+    burst = np.repeat(r.integers(0, 300, 100).astype(np.uint32), 20)
+    return {"uniform": uniform, "heavy_dup": heavy, "burst": burst}
+
+
+def _engine_grid():
+    for variant in VARIANTS:
+        yield variant, False, "jnp"
+        if variant != "sbf":
+            yield variant, True, "jnp"
+            yield variant, True, "pallas"
+
+
+@pytest.mark.parametrize("variant,packed,backend", list(_engine_grid()))
+def test_incremental_load_equals_popcount(variant, packed, backend):
+    cfg = DedupConfig.for_variant(variant, memory_bits=1 << 12,
+                                  batch_size=256, packed=packed,
+                                  backend=backend)
+    d = Dedup(cfg)
+    for name, keys in _streams(3).items():
+        for n in (len(keys), len(keys) - 97):                # ragged tail
+            st, _ = d.run_stream(d.init(), jnp.asarray(keys[:n]))
+            assert np.array_equal(
+                _exact_load(st, variant).astype(np.int64),
+                np.asarray(st.load, np.int64)), (
+                f"load drifted: {variant}/{'packed' if packed else 'dense8'}"
+                f"/{backend} on {name}[:{n}]")
+
+
+@pytest.mark.parametrize("variant", [v for v in VARIANTS if v != "sbf"])
+@pytest.mark.parametrize("packed", [False, True])
+def test_debug_exact_load_matches_incremental(variant, packed):
+    """The escape hatch (full popcount per step) and the incremental tracker
+    must agree on every intermediate state, not only the final one."""
+    keys = _streams(11)["heavy_dup"]
+    kw = dict(memory_bits=1 << 12, batch_size=256, packed=packed)
+    d_inc = Dedup(DedupConfig.for_variant(variant, **kw))
+    d_dbg = Dedup(DedupConfig.for_variant(variant, debug_exact_load=True, **kw))
+    st_i, st_d = d_inc.init(), d_dbg.init()
+    for i in range(0, 1792, 256):
+        chunk = jnp.asarray(keys[i:i + 256])
+        st_i, ri = d_inc.process(st_i, chunk)
+        st_d, rd = d_dbg.process(st_d, chunk)
+        assert np.array_equal(np.asarray(st_i.load), np.asarray(st_d.load))
+        assert np.array_equal(np.asarray(ri.dup), np.asarray(rd.dup))
+
+
+def test_load_exact_with_interleaved_ragged_batches():
+    """Partial-valid batches interleaved with full ones (checkpoint/restart
+    shapes): sentinel lanes must never contribute to the load."""
+    cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 12,
+                                  batch_size=128, packed=True)
+    d = Dedup(cfg)
+    st = d.init()
+    r = np.random.default_rng(5)
+    for nv in (128, 13, 128, 1, 77, 128):
+        keys = jnp.asarray(r.integers(0, 90, 128).astype(np.uint32))
+        valid = jnp.arange(128) < nv
+        st, _ = d.process(st, keys, valid)
+        assert np.array_equal(np.asarray(popcount(st.bits)),
+                              np.asarray(st.load))

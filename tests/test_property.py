@@ -1,8 +1,17 @@
-"""Hypothesis property-based tests on the system's exact invariants."""
+"""Hypothesis property-based tests on the system's exact invariants.
+
+``hypothesis`` is an *optional* test dependency (not in the runtime image —
+see tests/requirements-optional.txt); the module skips cleanly when absent.
+Deterministic sweep-style property tests that must always run live in
+tests/test_load_tracking.py instead.
+"""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.batched import intra_batch_seen
 from repro.core.hashing import hash_positions, derive_seeds, route_hash
