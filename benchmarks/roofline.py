@@ -18,6 +18,7 @@ import os
 
 import numpy as np
 
+from repro.compat import normalize_cost_analysis
 from repro.configs import get_arch
 from repro.launch.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
@@ -82,10 +83,12 @@ def roofline_terms(rec: dict) -> dict:
         # no-fusion upper bracket, reported alongside.
         bytes_acc = la.get("hbm_bytes_essential", la["hbm_bytes"])
         coll = la["collectives_bytes"].get("total", 0)
-    else:   # legacy records
-        cost = rec.get("cost", {})
+    else:   # legacy records — possibly raw cost_analysis() payloads written
+            # by a drifted dryrun (list-of-dicts on jax 0.4.x); normalize
+        cost = normalize_cost_analysis(rec.get("cost"))
         flops = cost.get("flops", 0.0)
-        bytes_acc = cost.get("bytes_accessed", 0.0)
+        bytes_acc = cost.get("bytes_accessed",
+                             cost.get("bytes accessed", 0.0))
         coll = rec.get("collectives_bytes", {}).get("total", 0)
     t_compute = flops / PEAK_FLOPS_BF16
     t_memory = bytes_acc / HBM_BW

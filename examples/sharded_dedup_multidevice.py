@@ -5,9 +5,13 @@
 Key-space-partitioned RLBSBF filters over a (data=4, model=2) mesh with
 MoE-style all-to-all routing (DESIGN.md §4): every device ingests a slice of
 the stream, routes keys to their owner shard, and the ensemble behaves
-bit-identically to one filter with the aggregate memory. Run on a real pod,
-the same code spans (pod, data, model) = 512 chips — see
-repro/launch/dryrun.py for the compile-level proof.
+bit-identically to one filter with the aggregate memory. The whole stream is
+ingested with ONE dispatch — ``ShardedDedup.run_stream`` scans the
+shard-mapped step over batches with the sharded state donated in place — and
+all version-sensitive jax surfaces go through ``repro.compat``, so this runs
+on the pinned jax 0.4.x and on newer releases alike. Run on a real pod, the
+same code spans (pod, data, model) = 512 chips — see repro/launch/dryrun.py
+for the compile-level proof.
 """
 
 import os
@@ -17,9 +21,10 @@ import jax                                                    # noqa: E402
 import jax.numpy as jnp                                       # noqa: E402
 import numpy as np                                            # noqa: E402
 
+from repro.compat import set_mesh                             # noqa: E402
 from repro.core import Dedup, DedupConfig                     # noqa: E402
 from repro.dedup import (ShardedDedup, ShardedDedupConfig,    # noqa: E402
-                         truth_from_stream)
+                         StreamMetrics, truth_from_stream)
 
 BATCH = 8192
 STEPS = 40
@@ -28,28 +33,25 @@ MEMORY = 1 << 20
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 print(f"mesh: {dict(mesh.shape)} -> {len(jax.devices())} devices")
 
-cfg = DedupConfig.for_variant("rlbsbf", memory_bits=MEMORY)
+cfg = DedupConfig.for_variant("rlbsbf", memory_bits=MEMORY, batch_size=BATCH)
 sd = ShardedDedup(ShardedDedupConfig(base=cfg), mesh)
 print(f"{sd.n_shards} shards x {sd.local_cfg.s} bits x k={sd.local_cfg.k}")
 
-state = sd.init()
-step = sd.make_step(BATCH // sd.n_shards)
 rng = np.random.default_rng(0)
-all_keys, all_dups, overflow = [], [], 0
-with jax.set_mesh(mesh):
-    for _ in range(STEPS):
-        keys = rng.integers(0, 120_000, BATCH).astype(np.uint32)
-        state, dup, ovf = step(state, jnp.asarray(keys))
-        all_keys.append(keys)
-        all_dups.append(np.asarray(dup))
-        overflow += int(np.asarray(ovf).sum())
+keys = rng.integers(0, 120_000, STEPS * BATCH).astype(np.uint32)
+metrics = StreamMetrics()
+with set_mesh(mesh):
+    state, dup, ovf = sd.run_stream(sd.init(), jnp.asarray(keys))
 
-keys = np.concatenate(all_keys)
-dup = np.concatenate(all_dups)
+dup = np.asarray(dup)
 truth = truth_from_stream(keys)
-fpr = (dup & ~truth).sum() / (~truth).sum()
-fnr = (~dup & truth).sum() / truth.sum()
-print(f"sharded  : FPR={fpr:.4f} FNR={fnr:.4f} overflow={overflow}")
+metrics.update(dup, truth, load=state.load, s_bits=sd.n_shards *
+               sd.local_cfg.k * sd.local_cfg.s, overflow=ovf)
+m = metrics.summary()
+print(f"sharded  : FPR={m['fpr']:.4f} FNR={m['fnr']:.4f} "
+      f"overflow={m['overflow']} "
+      f"(one dispatch for {STEPS} batches; scan cache="
+      f"{sd.stream_cache_size()})")
 
 single = Dedup(DedupConfig.for_variant("rlbsbf", memory_bits=MEMORY,
                                        batch_size=BATCH))

@@ -2,6 +2,7 @@
 """Diff fresh throughput numbers against the committed BENCH_throughput.json.
 
     PYTHONPATH=src python scripts/bench_check.py [--tol 0.25] [--update]
+    PYTHONPATH=src python scripts/bench_check.py --sharded [--tol 0.35]
 
 Exit codes: 0 = within tolerance (or improved), 1 = regression, 2 = missing
 artifact. ``--update`` rewrites the artifact's ``current`` section with the
@@ -12,6 +13,14 @@ The check compares elems/s per engine: fresh must be >= (1 - tol) * committed.
 The sequential oracle and interpret-mode Pallas rows are informational only —
 their wall-clock is dominated by python/interpreter overhead and jitters too
 much to gate on.
+
+``--sharded`` validates the committed BENCH_sharded.json (emitted by
+``python -m benchmarks.sharded_scaling``) against its frozen ``baseline``
+section WITHOUT re-measuring (the sweep needs one subprocess per simulated
+device count): every device count must be present with positive elems/s, a
+stream compile-cache of 1 (the one-dispatch contract), and
+current >= (1 - tol) * baseline. The default sharded tolerance is looser —
+multi-process wall-clock on a shared CPU jitters more than in-process runs.
 """
 
 from __future__ import annotations
@@ -26,13 +35,60 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 GATED = ("batched_dense8", "batched_packed")
 
 
+def check_sharded(tol: float) -> int:
+    """Validate the committed BENCH_sharded.json against its frozen baseline
+    (structure + per-device-count elems/s trajectory). No re-measuring."""
+    from benchmarks.sharded_scaling import BENCH_PATH as SHARDED_PATH
+    from benchmarks.sharded_scaling import DEVICE_COUNTS
+
+    if not os.path.exists(SHARDED_PATH):
+        print(f"bench_check: no committed artifact at {SHARDED_PATH} — run "
+              f"`python -m benchmarks.sharded_scaling --fast` first")
+        return 2
+    with open(SHARDED_PATH) as f:
+        doc = json.load(f)
+    baseline, current = doc.get("baseline", {}), doc.get("current", {})
+    fail = False
+    print(f"{'devices':10s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
+    for d in DEVICE_COUNTS:
+        key = f"devices_{d}"
+        cur = current.get(key, {})
+        if "eps" not in cur:
+            print(f"{d:<10d} {'—':>12s} {'MISSING':>12s}   REGRESSION")
+            fail = True
+            continue
+        status = ""
+        if cur["eps"] <= 0:
+            status = "  REGRESSION(non-positive eps)"
+        elif cur.get("stream_cache") != 1:
+            # one compiled scan per stream length — per-batch retrace would
+            # show up here long before it shows up in wall-clock
+            status = f"  REGRESSION(stream_cache={cur.get('stream_cache')})"
+        ref = baseline.get(key, {}).get("eps")
+        ratio = (cur["eps"] / ref) if ref else float("nan")
+        if ref and cur["eps"] < (1.0 - tol) * ref and not status:
+            status = "  REGRESSION"
+        print(f"{d:<10d} {ref or 0:12.0f} {cur['eps']:12.0f} {ratio:6.2f}x"
+              f"{status}")
+        fail = fail or bool(status)
+    return 1 if fail else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tol", type=float, default=0.25,
-                    help="allowed fractional slowdown vs committed numbers")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="allowed fractional slowdown vs committed numbers "
+                         "(default 0.25, or 0.35 with --sharded)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the artifact's 'current' section")
+    ap.add_argument("--sharded", action="store_true",
+                    help="validate BENCH_sharded.json against its frozen "
+                         "baseline instead of re-measuring throughput")
     args = ap.parse_args(argv)
+    if args.sharded:
+        return check_sharded(0.35 if args.tol is None else args.tol)
+    if args.tol is None:
+        args.tol = 0.25
 
     from benchmarks.throughput import (BENCH_PATH, measure_engines,
                                        write_bench_artifact)

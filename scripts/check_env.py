@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Fail fast when the installed JAX cannot run this repo.
+
+    PYTHONPATH=src python scripts/check_env.py
+
+Exit 0 with a one-line-per-surface report when everything the repo needs is
+available (directly or through the ``repro.compat`` adaptation layer);
+exit 1 with an explicit list of the missing surfaces and what depends on
+them otherwise — so a broken environment is a clear message at the start of
+a session, not an ``AttributeError`` deep inside a shard_map trace.
+
+The repo's pinned-JAX policy (DESIGN.md §4): version-sensitive jax APIs are
+only touched through ``repro.compat``; this script is the runtime audit of
+that contract.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+# what breaks when a surface is missing — the actionable half of the message
+_DEPENDENTS = {
+    "shard_map": "repro.dedup.sharded, repro.distributed.collectives, "
+                 "tests/test_distributed.py",
+    "make_mesh": "every mesh construction site (launch/mesh.py, tests, "
+                 "examples)",
+    "all_to_all": "the sharded dedup dispatch (repro.dedup.sharded)",
+    "pallas": "the fused single-launch step (repro.kernels.fused_step, "
+              "cfg.backend='pallas')",
+}
+
+
+def main() -> int:
+    try:
+        import jax  # noqa: F401
+    except ImportError as e:
+        print(f"check_env: FAIL — jax is not importable: {e}")
+        return 1
+    from repro import compat
+
+    report = compat.jax_api_report()
+    print(f"check_env: jax {report['jax_version']}")
+    print(f"  shard_map        : "
+          f"{'jax.shard_map' if report['native_shard_map'] else 'jax.experimental.shard_map' if report['shard_map'] else 'MISSING'}")
+    print(f"  ambient mesh     : "
+          f"{'jax.set_mesh / use_mesh' if report['set_mesh'] else 'none (0.4.x explicit-mesh path — OK)'}")
+    print(f"  make_mesh        : {'ok' if report['make_mesh'] else 'MISSING'}")
+    print(f"  all_to_all       : {'ok' if report['all_to_all'] else 'MISSING'}")
+    print(f"  pallas           : {'ok' if report['pallas'] else 'MISSING'}")
+
+    # cost_analysis normalization must hold on a real compiled executable
+    try:
+        import jax.numpy as jnp
+        c = jax.jit(lambda x: (x * x).sum()).lower(
+            jax.ShapeDtypeStruct((8,), jnp.float32)).compile()
+        ca = compat.cost_analysis_dict(c)
+        assert isinstance(ca, dict)
+        print("  cost_analysis    : ok (normalized to dict)")
+    except Exception as e:  # noqa: BLE001
+        print(f"  cost_analysis    : FAIL ({type(e).__name__}: {e})")
+        print("check_env: FAIL — compiled.cost_analysis() could not be "
+              "normalized; launch/analysis.py and the roofline will break")
+        return 1
+
+    missing = compat.missing_apis()
+    if missing:
+        print("check_env: FAIL — the installed jax lacks required APIs:")
+        for name in missing:
+            print(f"  - {name}: needed by {_DEPENDENTS.get(name, '(core)')}")
+        print("  Install a jax with these surfaces (>= 0.4.30 works; the "
+              "container pins 0.4.37) — repro.compat adapts the spelling, "
+              "but cannot conjure a missing primitive.")
+        return 1
+    print("check_env: OK — repro.compat can satisfy every required surface")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,6 +29,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import jit_cache_size
 from .batched import BatchResult, make_batched_step
 from .config import DedupConfig
 from .state import FilterState, init_state
@@ -86,7 +87,7 @@ class Dedup:
     def stream_cache_size(self) -> int:
         """Number of compiled specializations of the stream scan (one per
         distinct stream length) — used by the no-recompile regression test."""
-        return self._stream._cache_size()
+        return jit_cache_size(self._stream)
 
     def run_stream_oracle(self, state: FilterState, keys: jnp.ndarray
                           ) -> Tuple[FilterState, jnp.ndarray]:

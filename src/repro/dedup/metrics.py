@@ -31,22 +31,32 @@ class StreamMetrics:
     true_duplicate: int = 0
     false_pos: int = 0
     false_neg: int = 0
-    overflow: int = 0
+    _overflow: int = 0
     _t0: float = dataclasses.field(default_factory=time.perf_counter)
     load_history: list = dataclasses.field(default_factory=list)
     # per-batch device sums, folded into the (arbitrary-precision) python int
     # counters at read-out — a long-lived device scalar accumulator would
     # silently wrap at int32
     _pending: list = dataclasses.field(default_factory=list)
+    _pending_ovf: list = dataclasses.field(default_factory=list)
     _FOLD_EVERY = 512
 
     def update(self, reported_dup: np.ndarray, truth_dup: Optional[np.ndarray],
                load: Optional[np.ndarray] = None, s_bits: Optional[int] = None,
-               overflow: int = 0) -> None:
+               overflow=0) -> None:
         if not hasattr(reported_dup, "sum"):      # plain sequences accepted
             reported_dup = np.asarray(reported_dup)
         self.n += int(np.prod(reported_dup.shape))   # static shape — no sync
-        self.overflow += int(overflow)
+        if hasattr(overflow, "ndim"):
+            # device (or numpy) overflow counters — e.g. the (n_batches,
+            # n_shards) array ShardedDedup.run_stream returns — are deferred
+            # like the dup sums: the device-side reduce is issued now, the
+            # transfer happens at read-out (the ``overflow`` property folds)
+            self._pending_ovf.append(overflow.sum())
+            if len(self._pending_ovf) >= self._FOLD_EVERY:
+                self._fold()
+        else:
+            self._overflow += int(overflow)
         if truth_dup is not None:
             if not hasattr(truth_dup, "sum"):
                 truth_dup = np.asarray(truth_dup)
@@ -77,8 +87,16 @@ class StreamMetrics:
             self.false_pos += int(fp)
             self.false_neg += int(fn)
         self._pending.clear()
+        for o in self._pending_ovf:
+            self._overflow += int(o)
+        self._pending_ovf.clear()
 
     # -- the paper's headline numbers (sync happens here, not in update) - //
+    @property
+    def overflow(self) -> int:
+        self._fold()
+        return self._overflow
+
     @property
     def fpr(self) -> float:
         self._fold()
@@ -122,6 +140,7 @@ class StreamMetrics:
         return None
 
     def summary(self) -> dict:
+        self._fold()
         loads = self._loads()
         return {
             "n": self.n, "fpr": self.fpr, "fnr": self.fnr,

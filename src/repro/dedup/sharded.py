@@ -14,24 +14,39 @@ the beyond-paper distribution design (DESIGN.md §4):
   * Capacity overflow (Poisson tail) is *conservatively reported distinct*
     and counted — at capacity_factor=2 the overflow rate is < 1e-6 for
     B/S >= 16; the monitor in metrics.py tracks it.
+  * The per-shard work is the SAME batched step as the single-device engine
+    (``core.batched.make_batched_step``) — including the exact incremental
+    load tracking (§3.1) and the fused Pallas backend when
+    ``base.backend="pallas"`` — applied below the leading shard axis.
+  * ``run_stream`` mirrors the single-device engine (§3.5): one cached
+    jitted ``lax.scan`` over batches with the sharded ``FilterState``
+    *donated* and aliased in place, so a multi-batch sharded stream is ONE
+    dispatch instead of one per batch; per-batch duplicate verdicts and
+    overflow counters accumulate device-side (read out lazily via
+    ``dedup.metrics.StreamMetrics``).
+
+All version-sensitive jax surfaces (``shard_map``, the ambient mesh) go
+through ``repro.compat`` — never the raw API (pinned-jax policy, DESIGN §4).
 
 Exactness within a step: keys landing on their owner in the same step window
 are cross-deduplicated by the batched engine's intra-batch matching — the
 same semantics a single giant filter would give under the batched engine.
+Ragged stream tails ride through as ``valid``-masked lanes: an invalid lane
+is never routed, never counted as overflow, and never inserted.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import compat
 from ..core.batched import BatchResult, make_batched_step
 from ..core.config import DedupConfig
 from ..core.hashing import route_hash
@@ -71,6 +86,10 @@ class ShardedDedup:
             scfg.base, shards=self.n_shards).validate()
         self._step = make_batched_step(self.local_cfg)
         self.axis = scfg.mesh_axes
+        # jitted callables are built once per (kind, local_batch) and reused —
+        # same compile-cache discipline as the single-device engine (§3.5)
+        self._step_fns: Dict[int, jax.stages.Wrapped] = {}
+        self._stream_fns: Dict[int, jax.stages.Wrapped] = {}
 
     # -------------------------------------------------------------- //
     def init(self, seed: int | None = None) -> FilterState:
@@ -87,37 +106,31 @@ class ShardedDedup:
             rng=jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
                 base.rng, jnp.arange(self.n_shards)),
         )
-        shard_spec = P(self.axis)  # leading shard dim split over mesh axes
-        sharding = NamedSharding(self.mesh, shard_spec)
         return jax.tree.map(
             lambda x: jax.device_put(x, NamedSharding(
                 self.mesh, P(self.axis, *([None] * (x.ndim - 1))))), state)
 
     # -------------------------------------------------------------- //
-    def make_step(self, local_batch: int):
-        """Returns a jitted (state, keys) -> (state, dup, overflow_count) fn.
-
-        ``keys`` is the *global* batch sharded over batch_axes; state carries
-        the leading shard axis sharded over mesh_axes.
-        """
-        scfg, mesh, n_shards = self.scfg, self.mesh, self.n_shards
-        cap = scfg.capacity(local_batch, mesh)
-        step = self._step
+    def _local_fn(self, cap: int):
+        """Per-device body: route -> all_to_all -> local batched step ->
+        verdicts home. ``keys``/``valid`` are this device's slice; state
+        fields carry leading dim 1 (this device's shard)."""
+        n_shards, step = self.n_shards, self._step
         seed = self.local_cfg.seed
-        all_axes = scfg.mesh_axes
+        all_axes = self.scfg.mesh_axes
 
-        def local_fn(state: FilterState, keys: jnp.ndarray):
-            # state fields carry leading dim 1 (this device's shard)
+        def local_fn(state: FilterState, keys: jnp.ndarray,
+                     valid: jnp.ndarray):
             state = jax.tree.map(lambda x: x[0], state)
-            b = keys.shape[0]
             owner = route_hash(keys, n_shards, seed)            # (b,)
-            onehot = (owner[:, None] ==
-                      jnp.arange(n_shards, dtype=jnp.int32)[None, :])
+            onehot = (valid[:, None] &
+                      (owner[:, None] ==
+                       jnp.arange(n_shards, dtype=jnp.int32)[None, :]))
             pos_in = jnp.cumsum(onehot, axis=0) - 1              # (b, S)
             my_pos = jnp.take_along_axis(
                 pos_in, owner[:, None], axis=1)[:, 0]            # (b,)
-            keep = my_pos < cap
-            overflow = jnp.sum(~keep)
+            keep = valid & (my_pos < cap)
+            overflow = jnp.sum(valid & ~keep)
             # dispatch buffers (S, C)
             send_keys = jnp.zeros((n_shards, cap), jnp.uint32)
             send_valid = jnp.zeros((n_shards, cap), bool)
@@ -142,12 +155,84 @@ class ShardedDedup:
             state = jax.tree.map(lambda x: x[None], state)
             return state, dup, overflow[None].astype(jnp.int32)
 
+        return local_fn
+
+    def _shard_mapped(self, local_batch: int):
+        """The shard-mapped (state, keys, valid) -> (state, dup, ovf) body;
+        ``keys`` is the *global* batch sharded over batch_axes, state carries
+        the leading shard axis sharded over mesh_axes."""
+        cap = self.scfg.capacity(local_batch, self.mesh)
         state_spec = jax.tree.map(
-            lambda _: P(all_axes), FilterState(0, 0, 0, 0))
-        batch_spec = P(scfg.batch_axes)
-        fn = jax.shard_map(
-            local_fn, mesh=mesh,
-            in_specs=(state_spec, batch_spec),
-            out_specs=(state_spec, batch_spec, P(all_axes)),
+            lambda _: P(self.axis), FilterState(0, 0, 0, 0))
+        batch_spec = P(self.scfg.batch_axes)
+        return compat.shard_map(
+            self._local_fn(cap), mesh=self.mesh,
+            in_specs=(state_spec, batch_spec, batch_spec),
+            out_specs=(state_spec, batch_spec, P(self.axis)),
             check_vma=False)
-        return jax.jit(fn)
+
+    # -------------------------------------------------------------- //
+    def make_step(self, local_batch: int):
+        """Returns a jitted (state, keys) -> (state, dup, overflow) fn for
+        one global batch of ``local_batch * n_shards`` keys (all valid)."""
+        if local_batch not in self._step_fns:
+            smapped = self._shard_mapped(local_batch)
+
+            def step(state: FilterState, keys: jnp.ndarray):
+                valid = jnp.ones(keys.shape, bool)
+                return smapped(state, keys, valid)
+
+            self._step_fns[local_batch] = jax.jit(step)
+        return self._step_fns[local_batch]
+
+    # -------------------------------------------------------------- //
+    def _make_stream(self, local_batch: int):
+        """One jitted scan over batches of the shard-mapped body, the sharded
+        state donated (aliased in place across the whole stream) — the
+        sharded mirror of the single-device ``run_stream`` (§3.5)."""
+        if local_batch not in self._stream_fns:
+            smapped = self._shard_mapped(local_batch)
+
+            def stream(state: FilterState, kb: jnp.ndarray, vb: jnp.ndarray):
+                def body(st, xs):
+                    kk, vv = xs
+                    st, dup, ovf = smapped(st, kk, vv)
+                    return st, (dup, ovf)
+
+                state, (dups, ovfs) = jax.lax.scan(body, state, (kb, vb))
+                return state, dups, ovfs
+
+            self._stream_fns[local_batch] = jax.jit(stream, donate_argnums=0)
+        return self._stream_fns[local_batch]
+
+    def run_stream(self, state: FilterState, keys: jnp.ndarray
+                   ) -> Tuple[FilterState, jnp.ndarray, jnp.ndarray]:
+        """Whole (N,) stream in ONE dispatch: pad the tail with invalid
+        lanes, reshape to (n_batches, global_batch), scan the shard-mapped
+        step. Returns (state, per-element dup (N,), per-batch-per-shard
+        overflow (n_batches, n_shards) int32 — a device array; feed it to
+        ``StreamMetrics.update(overflow=...)`` to accumulate without a host
+        sync).
+
+        The input ``state`` is donated — use the returned state afterwards,
+        never the argument (same contract as ``Dedup.run_stream``)."""
+        b = self.scfg.base.batch_size
+        if b % self.n_shards:
+            raise ValueError(
+                f"batch_size {b} must divide by n_shards {self.n_shards}")
+        n = keys.shape[0]
+        n_pad = (-n) % b
+        keys_p = jnp.pad(keys.astype(jnp.uint32), (0, n_pad))
+        valid = jnp.pad(jnp.ones((n,), bool), (0, n_pad))
+        kb = keys_p.reshape(-1, b)
+        vb = valid.reshape(-1, b)
+        stream = self._make_stream(b // self.n_shards)
+        state, dups, ovfs = stream(state, kb, vb)
+        return state, dups.reshape(-1)[:n], ovfs
+
+    def stream_cache_size(self) -> int:
+        """Compiled specializations of the stream scan (one per distinct
+        stream length) — the sharded no-recompile regression hook, mirroring
+        ``Dedup.stream_cache_size``."""
+        return sum(compat.jit_cache_size(fn)
+                   for fn in self._stream_fns.values())

@@ -12,6 +12,8 @@ from __future__ import annotations
 import re
 from typing import Dict
 
+from ..compat import cost_analysis_dict
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
@@ -69,11 +71,10 @@ def collective_counts(hlo_text: str) -> Dict[str, int]:
 
 
 def cost_summary(compiled) -> dict:
-    """flops / bytes from XLA's cost analysis (robust across backends)."""
+    """flops / bytes from XLA's cost analysis (robust across backends and
+    jax versions — the list-vs-dict return is normalized in repro.compat)."""
     try:
-        ca = compiled.cost_analysis()
-        if isinstance(ca, (list, tuple)):
-            ca = ca[0]
+        ca = cost_analysis_dict(compiled)
     except Exception as e:                       # pragma: no cover
         return {"error": f"cost_analysis failed: {e}"}
     out = {"flops": float(ca.get("flops", 0.0)),

@@ -26,6 +26,7 @@ import jax           # noqa: E402
 import numpy as np   # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import set_mesh                           # noqa: E402
 from repro.configs import all_arch_ids, get_arch            # noqa: E402
 from repro.launch.analysis import analyze_compiled          # noqa: E402
 from repro.launch.mesh import make_production_mesh          # noqa: E402
@@ -77,7 +78,7 @@ def dryrun_cell(arch_id: str, shape: str, multi_pod: bool) -> dict:
     step = arch.step(shape)
 
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if cell.kind == "train":
             opt_shape = jax.eval_shape(
                 lambda: init_opt_state(arch.opt_config(), params_shape))
@@ -137,7 +138,7 @@ def dedup_dryrun(multi_pod: bool, batch: int = 1 << 20,
         (batch,), np.uint32,
         sharding=NamedSharding(mesh, P(axes)))
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = step.lower(state_sds, keys_sds)
         compiled = lowered.compile()
     rec = {"arch": "dedup-stream", "shape": f"ingest_{batch}",

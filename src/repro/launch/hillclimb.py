@@ -26,6 +26,7 @@ import jax           # noqa: E402
 import numpy as np   # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import set_mesh                       # noqa: E402
 from repro.configs import get_arch                      # noqa: E402
 from repro.configs.registry import LMArch               # noqa: E402
 from repro.launch.analysis import analyze_compiled      # noqa: E402
@@ -65,7 +66,7 @@ def lower_lm_cell(arch: LMArch, shape: str, mesh):
     inputs = arch.input_specs(shape)
     bspecs = arch.batch_specs(shape, mesh)
     step = arch.step(shape)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if cell.kind == "train":
             opt_shape = jax.eval_shape(
                 lambda: init_opt_state(arch.opt_config(), params_shape))
@@ -127,7 +128,7 @@ def dedup_variant(label: str, hypothesis: str, packed: bool,
         lambda x: P(axes, *([None] * (x.ndim - 1))), state_shape)
     keys_sds = jax.ShapeDtypeStruct((batch,), np.uint32,
                                     sharding=NamedSharding(mesh, P(axes)))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         t0 = time.perf_counter()
         lowered = step.lower(_ws(state_shape, state_specs, mesh), keys_sds)
         compiled = lowered.compile()

@@ -1,0 +1,180 @@
+"""repro.compat — the version-adaptive jax choke point. Both API vintages
+are exercised via monkeypatched resolvers (the installed jax only has one),
+plus a real single-device shard_map through the wrapper."""
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+
+
+# ---------------------------------------------------------------- shard_map
+# compat.shard_map inspects the resolved callable's signature to decide the
+# replication-check spelling, so each fake carries its vintage's literal
+# keyword surface.
+
+def _old_api_fake(seen):
+    """jax 0.4.x/0.5.x surface: the flag is named ``check_rep``."""
+    def fake(f, *, mesh, in_specs, out_specs, check_rep=True):
+        seen.update(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=check_rep)
+        return f
+    return fake
+
+
+def _new_api_fake(seen):
+    """jax 0.6+ surface: the flag is named ``check_vma``."""
+    def fake(f, *, mesh, in_specs, out_specs, check_vma=True):
+        seen.update(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=check_vma)
+        return f
+    return fake
+
+
+def test_shard_map_maps_check_vma_to_check_rep(monkeypatch):
+    """Old API (jax 0.4.x/0.5.x): check_vma is delivered as check_rep."""
+    seen = {}
+    monkeypatch.setattr(compat, "_resolve_shard_map",
+                        lambda: _old_api_fake(seen))
+    f = lambda x: x  # noqa: E731
+    out = compat.shard_map(f, mesh="m", in_specs=P("data"),
+                           out_specs=P("data"), check_vma=False)
+    assert out is f
+    assert seen["check_rep"] is False
+    assert seen["mesh"] == "m"
+
+
+def test_shard_map_passes_check_vma_on_new_api(monkeypatch):
+    """New API (jax 0.6+): check_vma goes through under its own name."""
+    seen = {}
+    monkeypatch.setattr(compat, "_resolve_shard_map",
+                        lambda: _new_api_fake(seen))
+    compat.shard_map(lambda x: x, mesh="m", in_specs=P(),
+                     out_specs=P(), check_vma=False)
+    assert seen["check_vma"] is False
+    assert "check_rep" not in seen
+
+
+def test_shard_map_none_leaves_library_default(monkeypatch):
+    seen = {}
+    monkeypatch.setattr(compat, "_resolve_shard_map",
+                        lambda: _old_api_fake(seen))
+    compat.shard_map(lambda x: x, mesh="m", in_specs=P(), out_specs=P())
+    assert seen["check_rep"] is True          # untouched default
+
+
+def test_shard_map_real_single_device():
+    """The wrapper drives the installed jax end-to-end on a 1-device mesh."""
+    mesh = jax.make_mesh((1,), ("data",))
+    fn = compat.shard_map(
+        lambda x: jax.lax.psum(x.sum(), "data")[None],
+        mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
+    out = jax.jit(fn)(jnp.arange(8, dtype=jnp.float32))
+    assert float(np.asarray(out)[0]) == 28.0
+
+
+# ----------------------------------------------------------------- set_mesh
+def test_set_mesh_prefers_jax_set_mesh(monkeypatch):
+    calls = []
+
+    @contextlib.contextmanager
+    def fake_set_mesh(mesh):
+        calls.append(("enter", mesh))
+        yield mesh
+        calls.append(("exit", mesh))
+
+    monkeypatch.setattr(jax, "set_mesh", fake_set_mesh, raising=False)
+    with compat.set_mesh("MESH") as m:
+        assert m == "MESH"
+        assert calls == [("enter", "MESH")]
+    assert calls == [("enter", "MESH"), ("exit", "MESH")]
+
+
+def test_set_mesh_plain_global_setter_restores_previous(monkeypatch):
+    """A jax whose set_mesh is a bare global setter (no context manager):
+    the wrapper restores the PREVIOUS mesh on exit — never None."""
+    ambient = {"mesh": "OUTER"}
+    monkeypatch.setattr(jax, "set_mesh",
+                        lambda m: ambient.__setitem__("mesh", m),
+                        raising=False)
+    monkeypatch.setattr(jax, "get_mesh", lambda: ambient["mesh"],
+                        raising=False)
+    with compat.set_mesh("INNER"):
+        assert ambient["mesh"] == "INNER"
+    assert ambient["mesh"] == "OUTER"
+
+
+def test_set_mesh_falls_back_to_use_mesh(monkeypatch):
+    monkeypatch.delattr(jax, "set_mesh", raising=False)
+    calls = []
+
+    @contextlib.contextmanager
+    def fake_use_mesh(mesh):
+        calls.append(mesh)
+        yield
+
+    monkeypatch.setattr(jax.sharding, "use_mesh", fake_use_mesh,
+                        raising=False)
+    with compat.set_mesh("MESH"):
+        pass
+    assert calls == ["MESH"]
+
+
+def test_set_mesh_noop_on_bare_jax(monkeypatch):
+    """jax 0.4.x: neither API exists — documented no-op, never raises."""
+    monkeypatch.delattr(jax, "set_mesh", raising=False)
+    monkeypatch.delattr(jax.sharding, "use_mesh", raising=False)
+    with compat.set_mesh(object()) as m:
+        assert m is not None
+
+
+# ------------------------------------------------------------ cost analysis
+def test_normalize_cost_analysis_shapes():
+    assert compat.normalize_cost_analysis(None) == {}
+    assert compat.normalize_cost_analysis([]) == {}
+    assert compat.normalize_cost_analysis({"flops": 2.0}) == {"flops": 2.0}
+    assert compat.normalize_cost_analysis([{"flops": 2.0}]) == {"flops": 2.0}
+    assert compat.normalize_cost_analysis(({"flops": 2.0},)) == {"flops": 2.0}
+
+
+def test_cost_analysis_dict_real_compiled():
+    c = jax.jit(lambda a, b: (a @ b).sum()).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    ca = compat.cost_analysis_dict(c)
+    assert isinstance(ca, dict)
+    assert ca["flops"] > 0
+
+
+def test_cost_analysis_dict_both_return_vintages():
+    class OldCompiled:
+        def cost_analysis(self):
+            return [{"flops": 7.0}]
+
+    class NewCompiled:
+        def cost_analysis(self):
+            return {"flops": 7.0}
+
+    assert compat.cost_analysis_dict(OldCompiled())["flops"] == 7.0
+    assert compat.cost_analysis_dict(NewCompiled())["flops"] == 7.0
+
+
+# ------------------------------------------------------------- environment
+def test_jax_api_report_and_missing():
+    r = compat.jax_api_report()
+    assert r["jax_version"] == jax.__version__
+    assert r["shard_map"] is True            # every supported jax has one
+    assert compat.missing_apis() == []
+
+
+def test_resolve_shard_map_matches_installed_jax():
+    fn = compat._resolve_shard_map()
+    assert callable(fn)
+    import inspect
+    params = inspect.signature(fn).parameters
+    assert ("check_vma" in params) or ("check_rep" in params)

@@ -31,23 +31,25 @@ def _run_subprocess(code: str, devices: int = 8) -> str:
 
 
 def test_sharded_dedup_equals_single_filter():
+    """8 simulated devices: the sharded run_stream (ONE dispatch for the
+    whole 12-batch stream, donated state) matches the single aggregate
+    filter's FPR/FNR, overflows nothing, and compiles exactly once."""
     out = _run_subprocess("""
         import numpy as np, jax, jax.numpy as jnp, json
+        from repro.compat import set_mesh
         from repro.core import DedupConfig, Dedup
         from repro.dedup import ShardedDedup, ShardedDedupConfig, truth_from_stream
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-        cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 17)
+        cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 17,
+                                      batch_size=4096)
         sd = ShardedDedup(ShardedDedupConfig(base=cfg), mesh)
-        state = sd.init()
-        step = sd.make_step(4096 // 8)
         rng = np.random.default_rng(0)
-        ks, ds = [], []
-        with jax.set_mesh(mesh):
-            for _ in range(12):
-                keys = rng.integers(0, 30_000, 4096).astype(np.uint32)
-                state, dup, ovf = step(state, jnp.asarray(keys))
-                ks.append(keys); ds.append(np.asarray(dup))
-        keys = np.concatenate(ks); dup = np.concatenate(ds)
+        keys = rng.integers(0, 30_000, 12 * 4096).astype(np.uint32)
+        with set_mesh(mesh):
+            state, dup, ovf = sd.run_stream(sd.init(), jnp.asarray(keys))
+            # second stream of the same length: cached scan, no retrace
+            _state2, _d, _o = sd.run_stream(sd.init(), jnp.asarray(keys))
+        dup = np.asarray(dup)
         truth = truth_from_stream(keys)
         fpr = float((dup & ~truth).sum() / (~truth).sum())
         fnr = float((~dup & truth).sum() / truth.sum())
@@ -58,12 +60,14 @@ def test_sharded_dedup_equals_single_filter():
         fpr1 = float((dup1 & ~truth).sum() / (~truth).sum())
         fnr1 = float((~dup1 & truth).sum() / truth.sum())
         print(json.dumps({"fpr": fpr, "fnr": fnr, "fpr1": fpr1, "fnr1": fnr1,
-                          "overflow": int(np.asarray(ovf).sum())}))
+                          "overflow": int(np.asarray(ovf).sum()),
+                          "stream_cache": sd.stream_cache_size()}))
     """)
     r = json.loads(out.strip().splitlines()[-1])
     assert abs(r["fpr"] - r["fpr1"]) < 0.02
     assert abs(r["fnr"] - r["fnr1"]) < 0.02
     assert r["overflow"] == 0
+    assert r["stream_cache"] == 1
 
 
 def test_sharded_rsbf_positions_are_per_shard():
@@ -72,6 +76,7 @@ def test_sharded_rsbf_positions_are_per_shard():
     positions equals the number of routed (non-overflow) keys."""
     out = _run_subprocess("""
         import numpy as np, jax, jax.numpy as jnp, json
+        from repro.compat import set_mesh
         from repro.core import DedupConfig
         from repro.dedup import ShardedDedup, ShardedDedupConfig
         mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -81,7 +86,7 @@ def test_sharded_rsbf_positions_are_per_shard():
         step = sd.make_step(2048 // 8)
         rng = np.random.default_rng(0)
         total, ovf_total = 0, 0
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             for _ in range(6):
                 keys = rng.integers(0, 100_000, 2048).astype(np.uint32)
                 state, dup, ovf = step(state, jnp.asarray(keys))
@@ -100,6 +105,7 @@ def test_sharded_rsbf_positions_are_per_shard():
 def test_compressed_psum_error_feedback():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np, json
+        from repro.compat import set_mesh, shard_map
         from repro.distributed.collectives import compressed_psum
         from jax.sharding import PartitionSpec as P
         mesh = jax.make_mesh((8,), ("data",))
@@ -109,10 +115,10 @@ def test_compressed_psum_error_feedback():
             synced, err = compressed_psum({"g": g}, "data")
             return synced["g"], err["g"]
 
-        fn = jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
-                           out_specs=(P("data", None), P("data", None)),
-                           check_vma=False)
-        with jax.set_mesh(mesh):
+        fn = shard_map(f, mesh=mesh, in_specs=P("data", None),
+                       out_specs=(P("data", None), P("data", None)),
+                       check_vma=False)
+        with set_mesh(mesh):
             synced, err = fn(g_global)
         want = jnp.mean(g_global, axis=0)
         got = np.asarray(synced)[0]
@@ -160,6 +166,105 @@ def test_param_specs_divisible_everywhere():
                     continue
                 size = shr.axis_size(mesh, e)
                 assert dim % size == 0, (aid, path, sd.shape, spec)
+
+
+# ---------------- in-process sharded coverage (1 device, tier-1) -------- //
+# The multi-device tests above run in subprocesses and exercise real
+# collectives; these run in the pytest process on a 1x1 mesh so the sharded
+# path (compat shard_map, routing, scan/donation, overflow plumbing) can
+# never silently rot behind an API drift again.
+
+def _sharded_one_by_one(cfg):
+    from repro.dedup import ShardedDedup, ShardedDedupConfig
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    return ShardedDedup(ShardedDedupConfig(base=cfg), mesh)
+
+
+def test_sharded_parity_inprocess_single_shard():
+    """1x1 mesh: run_stream (scan, donated) is bit-identical to the
+    per-batch make_step loop, statistically matches the single-device
+    engine, masks the ragged tail, and compiles the scan exactly once."""
+    from repro.core import Dedup, DedupConfig
+    from repro.dedup import truth_from_stream
+
+    cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 15,
+                                  batch_size=512)
+    sd = _sharded_one_by_one(cfg)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 5_000, 5_000).astype(np.uint32)   # 5000 % 512 != 0
+
+    state, dup, ovf = sd.run_stream(sd.init(), jnp.asarray(keys))
+    dup = np.asarray(dup)
+    assert dup.shape == keys.shape
+    assert int(np.asarray(ovf).sum()) == 0
+
+    # scan path == per-batch step path, bit for bit (same shapes, same rng
+    # threading), on the multiple-of-batch prefix the step path can express
+    n_whole = (keys.shape[0] // 512) * 512
+    step = sd.make_step(512)
+    st = sd.init()
+    per_step = []
+    for i in range(n_whole // 512):
+        st, d, _ = step(st, jnp.asarray(keys[i * 512:(i + 1) * 512]))
+        per_step.append(np.asarray(d))
+    np.testing.assert_array_equal(dup[:n_whole], np.concatenate(per_step))
+
+    # one shard, same aggregate memory -> statistically the single filter
+    truth = truth_from_stream(keys)
+    fpr = (dup & ~truth).sum() / (~truth).sum()
+    fnr = (~dup & truth).sum() / truth.sum()
+    d1 = Dedup(cfg)
+    _, dup1 = d1.run_stream(d1.init(), jnp.asarray(keys))
+    dup1 = np.asarray(dup1)
+    fpr1 = (dup1 & ~truth).sum() / (~truth).sum()
+    fnr1 = (~dup1 & truth).sum() / truth.sum()
+    assert abs(fpr - fpr1) < 0.02
+    assert abs(fnr - fnr1) < 0.02
+
+    # same stream length again: the cached jitted scan is reused
+    sd.run_stream(sd.init(), jnp.asarray(keys))
+    assert sd.stream_cache_size() == 1
+
+
+def test_sharded_routes_through_fused_pallas_step():
+    """cfg.backend='pallas' reaches the fused kernel below the shard axis
+    and stays bit-identical to the jnp backend through routing + scan."""
+    from repro.core import DedupConfig
+
+    keys = np.random.default_rng(1).integers(0, 2_000, 768).astype(np.uint32)
+    dups = {}
+    for backend in ("jnp", "pallas"):
+        cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 12,
+                                      batch_size=256, packed=True,
+                                      backend=backend)
+        sd = _sharded_one_by_one(cfg)
+        _st, dup, ovf = sd.run_stream(sd.init(), jnp.asarray(keys))
+        dups[backend] = np.asarray(dup)
+        assert int(np.asarray(ovf).sum()) == 0
+    np.testing.assert_array_equal(dups["pallas"], dups["jnp"])
+
+
+def test_sharded_overflow_accumulates_into_metrics_devicewise():
+    """capacity_factor < 1 forces overflow; the (n_batches, n_shards) device
+    counter feeds StreamMetrics without a host sync and overflowed keys are
+    conservatively reported distinct."""
+    from repro.core import DedupConfig
+    from repro.dedup import (ShardedDedup, ShardedDedupConfig, StreamMetrics,
+                             truth_from_stream)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 14,
+                                  batch_size=256)
+    sd = ShardedDedup(ShardedDedupConfig(base=cfg, capacity_factor=0.5), mesh)
+    keys = np.random.default_rng(2).integers(0, 10_000, 2_048).astype(np.uint32)
+    state, dup, ovf = sd.run_stream(sd.init(), jnp.asarray(keys))
+    m = StreamMetrics()
+    m.update(dup, truth_from_stream(keys), overflow=ovf)
+    assert not m._pending_ovf or isinstance(m._pending_ovf[0], jnp.ndarray)
+    s = m.summary()                       # read-out folds the device counter
+    # cap = max(8, ceil(256 * 0.5)) = 128 -> exactly 128 of each 256-batch kept
+    assert s["overflow"] == int(np.asarray(ovf).sum()) == 2_048 - 8 * 128
+    assert m._pending_ovf == []
 
 
 def test_hlo_collective_parser():

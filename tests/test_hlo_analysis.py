@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.compat import cost_analysis_dict
 from repro.launch.analysis import loop_aware_analysis
 
 
@@ -23,7 +24,7 @@ def test_flat_cost_analysis_misses_trip_counts():
 
     s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     c = _compile(f, s, s)
-    flat = c.cost_analysis()["flops"]
+    flat = cost_analysis_dict(c)["flops"]
     assert flat < 2 * 2 * 128 ** 3          # ~1 matmul, not 10
 
 
@@ -66,7 +67,7 @@ def test_loop_aware_matches_xla_when_loop_free():
     c = _compile(h, jax.ShapeDtypeStruct((128, 256), jnp.float32),
                  jax.ShapeDtypeStruct((256, 64), jnp.float32))
     r = loop_aware_analysis(c.as_text())
-    xla = c.cost_analysis()["flops"]
+    xla = cost_analysis_dict(c)["flops"]
     assert abs(r["flops"] - xla) / xla < 0.05
 
 
