@@ -1,5 +1,7 @@
 """Sharded-dedup scaling sweep: elems/s of ``ShardedDedup.run_stream`` at
-1, 2, 4 and 8 simulated host devices.
+1, 2, 4 and 8 simulated host devices — for the packed 1-bit RLBSBF engine
+AND the SBF counter-plane engine (DESIGN.md §3.6), so the sharded artifact
+covers a counter variant.
 
     PYTHONPATH=src python -m benchmarks.sharded_scaling [--fast]
 
@@ -7,8 +9,10 @@ Each device count runs in its OWN subprocess because
 ``xla_force_host_platform_device_count`` is locked at the first jax init —
 the parent never touches multi-device state. Every worker ingests the same
 stream through the one-dispatch sharded scan (state donated, DESIGN.md §4)
-and reports elems/s, overflow and the compile-cache size (must be 1: the
-scan compiles once per stream length).
+and reports elems/s, overflow and the compile-cache size (must be 1 per
+engine: the scan compiles once per stream length). The SBF rows land under
+a ``"sbf"`` sub-record of each ``devices_N`` entry (the top-level fields
+stay the RLBSBF numbers the frozen baseline already anchors).
 
 Emits ``BENCH_sharded.json`` at the repo root, in the same
 baseline/current shape as ``BENCH_throughput.json``: ``baseline`` is frozen
@@ -51,30 +55,37 @@ def measure(devices: int, fast: bool = True) -> dict:
     n = 1 << (18 if fast else 21)
     batch = 8192
     mesh = jax.make_mesh((devices, 1), ("data", "model"))
-    cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 20,
-                                  batch_size=batch, packed=True)
-    sd = ShardedDedup(ShardedDedupConfig(base=cfg), mesh)
     keys = np.random.default_rng(9).integers(
         0, n, n).astype(np.uint32)
     jkeys = jnp.asarray(keys)
 
-    with set_mesh(mesh):
-        # compile at full shape, then time the cached scan (best-of-3:
-        # shared-CPU wall clock jitters far more than the engine does)
-        state, dup, ovf = sd.run_stream(sd.init(), jkeys)
-        np.asarray(dup)
-        best = float("inf")
-        for _ in range(3):
-            t0 = time.perf_counter()
-            _st, dup, ovf = sd.run_stream(sd.init(), jkeys)
+    def sweep(cfg):
+        sd = ShardedDedup(ShardedDedupConfig(base=cfg), mesh)
+        with set_mesh(mesh):
+            # compile at full shape, then time the cached scan (best-of-3:
+            # shared-CPU wall clock jitters far more than the engine does)
+            state, dup, ovf = sd.run_stream(sd.init(), jkeys)
             np.asarray(dup)
-            best = min(best, time.perf_counter() - t0)
-    return {
-        "devices": devices, "n": n, "batch": batch,
-        "eps": n / best, "us_per_elem": best / n * 1e6,
-        "overflow": int(np.asarray(ovf).sum()),
-        "stream_cache": sd.stream_cache_size(),
-    }
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                _st, dup, ovf = sd.run_stream(sd.init(), jkeys)
+                np.asarray(dup)
+                best = min(best, time.perf_counter() - t0)
+        return {
+            "eps": n / best, "us_per_elem": best / n * 1e6,
+            "overflow": int(np.asarray(ovf).sum()),
+            "stream_cache": sd.stream_cache_size(),
+        }
+
+    rec = sweep(DedupConfig.for_variant("rlbsbf", memory_bits=1 << 20,
+                                        batch_size=batch, packed=True))
+    rec.update(devices=devices, n=n, batch=batch)
+    # the counter variant on the same mesh: SBF rides the plane layout
+    # through the identical sharded scan (DESIGN §3.6)
+    rec["sbf"] = sweep(DedupConfig.for_variant(
+        "sbf", memory_bits=1 << 20, batch_size=batch, layout="planes"))
+    return rec
 
 
 def _worker_main(argv) -> int:
@@ -110,13 +121,17 @@ def write_sharded_artifact(current: dict, meta: dict) -> str:
     baseline = prev.get("baseline")
     # the frozen anchor only ever absorbs SUCCESSFUL records: a failed
     # subprocess must not permanently hollow out a device count's baseline —
-    # missing counts are backfilled by the next run that measures them
+    # missing counts are backfilled by the next run that measures them, and
+    # engine sub-records added later (e.g. the SBF counter rows) backfill
+    # into already-frozen device entries the same way
     ok = {k: v for k, v in current.items() if "eps" in v}
     if baseline is None:
         baseline = dict(ok, baseline_seeded_from_current=True)
     else:
         for k, v in ok.items():
-            baseline.setdefault(k, dict(v, baseline_backfilled=True))
+            base_rec = baseline.setdefault(k, dict(v, baseline_backfilled=True))
+            if "sbf" in v and "sbf" not in base_rec:
+                base_rec["sbf"] = dict(v["sbf"], baseline_backfilled=True)
     doc = {"schema": 1, "baseline": baseline, "current": current,
            "meta": meta}
     with open(BENCH_PATH, "w") as f:

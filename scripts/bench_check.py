@@ -3,6 +3,7 @@
 
     PYTHONPATH=src python scripts/bench_check.py [--tol 0.25] [--update]
     PYTHONPATH=src python scripts/bench_check.py --sharded [--tol 0.35]
+    PYTHONPATH=src python scripts/bench_check.py --counter [--tol 0.35]
 
 Exit codes: 0 = within tolerance (or improved), 1 = regression, 2 = missing
 artifact. ``--update`` rewrites the artifact's ``current`` section with the
@@ -19,8 +20,15 @@ much to gate on.
 section WITHOUT re-measuring (the sweep needs one subprocess per simulated
 device count): every device count must be present with positive elems/s, a
 stream compile-cache of 1 (the one-dispatch contract), and
-current >= (1 - tol) * baseline. The default sharded tolerance is looser —
+current >= (1 - tol) * baseline — for the RLBSBF rows AND the SBF
+counter-plane sub-records. The default sharded tolerance is looser —
 multi-process wall-clock on a shared CPU jitters more than in-process runs.
+
+``--counter`` validates the committed BENCH_counter.json (emitted by
+``python -m benchmarks.counter_throughput``) the same no-re-measure way,
+plus the counter-layout acceptance bar (DESIGN §3.6): at the paper-scale
+row (``mem_26``) the plane layout must hold >= 2x the dense8 SBF baseline's
+elems/s.
 """
 
 from __future__ import annotations
@@ -35,9 +43,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 GATED = ("batched_dense8", "batched_packed")
 
 
+def _row_status(cur: dict, ref: float | None, tol: float) -> str:
+    if cur.get("eps", 0) <= 0:
+        return "  REGRESSION(non-positive eps)"
+    if cur.get("stream_cache") != 1:
+        # one compiled scan per stream length — per-batch retrace would
+        # show up here long before it shows up in wall-clock
+        return f"  REGRESSION(stream_cache={cur.get('stream_cache')})"
+    if ref and cur["eps"] < (1.0 - tol) * ref:
+        return "  REGRESSION"
+    return ""
+
+
 def check_sharded(tol: float) -> int:
     """Validate the committed BENCH_sharded.json against its frozen baseline
-    (structure + per-device-count elems/s trajectory). No re-measuring."""
+    (structure + per-device-count elems/s trajectory, RLBSBF rows and the
+    SBF counter-plane sub-records). No re-measuring."""
     from benchmarks.sharded_scaling import BENCH_PATH as SHARDED_PATH
     from benchmarks.sharded_scaling import DEVICE_COUNTS
 
@@ -49,29 +70,72 @@ def check_sharded(tol: float) -> int:
         doc = json.load(f)
     baseline, current = doc.get("baseline", {}), doc.get("current", {})
     fail = False
-    print(f"{'devices':10s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
+    print(f"{'engine':16s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
     for d in DEVICE_COUNTS:
         key = f"devices_{d}"
-        cur = current.get(key, {})
-        if "eps" not in cur:
-            print(f"{d:<10d} {'—':>12s} {'MISSING':>12s}   REGRESSION")
-            fail = True
-            continue
-        status = ""
-        if cur["eps"] <= 0:
-            status = "  REGRESSION(non-positive eps)"
-        elif cur.get("stream_cache") != 1:
-            # one compiled scan per stream length — per-batch retrace would
-            # show up here long before it shows up in wall-clock
-            status = f"  REGRESSION(stream_cache={cur.get('stream_cache')})"
-        ref = baseline.get(key, {}).get("eps")
-        ratio = (cur["eps"] / ref) if ref else float("nan")
-        if ref and cur["eps"] < (1.0 - tol) * ref and not status:
-            status = "  REGRESSION"
-        print(f"{d:<10d} {ref or 0:12.0f} {cur['eps']:12.0f} {ratio:6.2f}x"
-              f"{status}")
-        fail = fail or bool(status)
+        for sub, label in ((None, f"{d} rlbsbf"), ("sbf", f"{d} sbf")):
+            cur = current.get(key, {})
+            ref_rec = baseline.get(key, {})
+            if sub is not None:
+                cur = cur.get(sub, {})
+                ref_rec = ref_rec.get(sub, {})
+            if "eps" not in cur:
+                print(f"{label:16s} {'—':>12s} {'MISSING':>12s}   REGRESSION")
+                fail = True
+                continue
+            ref = ref_rec.get("eps")
+            status = _row_status(cur, ref, tol)
+            ratio = (cur["eps"] / ref) if ref else float("nan")
+            print(f"{label:16s} {ref or 0:12.0f} {cur['eps']:12.0f} "
+                  f"{ratio:6.2f}x{status}")
+            fail = fail or bool(status)
     return 1 if fail else 0
+
+
+def check_counter(tol: float) -> int:
+    """Validate the committed BENCH_counter.json: trajectory vs the frozen
+    baseline for every gated row, plus the DESIGN §3.6 acceptance bar —
+    plane-layout SBF >= 2x dense8 SBF elems/s at the paper-scale row."""
+    from benchmarks.counter_throughput import BENCH_PATH as COUNTER_PATH
+    from benchmarks.counter_throughput import GATE_MEM, MEM_SWEEP
+
+    if not os.path.exists(COUNTER_PATH):
+        print(f"bench_check: no committed artifact at {COUNTER_PATH} — run "
+              f"`python -m benchmarks.counter_throughput --fast` first")
+        return 2
+    with open(COUNTER_PATH) as f:
+        doc = json.load(f)
+    baseline, current = doc.get("baseline", {}), doc.get("current", {})
+    fail = False
+    print(f"{'row':24s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
+    for mem in MEM_SWEEP:
+        tag = f"mem_{mem.bit_length() - 1}"
+        for eng in ("sbf_dense8", "sbf_planes"):
+            key = f"{tag}/{eng}"
+            cur = current.get(key, {})
+            if "eps" not in cur:
+                print(f"{key:24s} {'—':>12s} {'MISSING':>12s}   REGRESSION")
+                fail = True
+                continue
+            ref = baseline.get(key, {}).get("eps")
+            ratio = (cur["eps"] / ref) if ref else float("nan")
+            status = ""
+            if ref and cur["eps"] < (1.0 - tol) * ref:
+                status = "  REGRESSION"
+            print(f"{key:24s} {ref or 0:12.0f} {cur['eps']:12.0f} "
+                  f"{ratio:6.2f}x{status}")
+            fail = fail or bool(status)
+    gate_tag = f"mem_{GATE_MEM.bit_length() - 1}"
+    d8 = current.get(f"{gate_tag}/sbf_dense8", {}).get("eps")
+    pl = current.get(f"{gate_tag}/sbf_planes", {}).get("eps")
+    if not d8 or not pl:
+        print(f"counter gate: {gate_tag} rows missing   REGRESSION")
+        return 1
+    speedup = pl / d8
+    verdict = "ok" if speedup >= 2.0 else "REGRESSION(< 2x)"
+    print(f"counter gate ({gate_tag}): planes/dense8 = {speedup:.2f}x "
+          f"(>= 2x required)   {verdict}")
+    return 1 if (fail or speedup < 2.0) else 0
 
 
 def main(argv=None) -> int:
@@ -84,9 +148,14 @@ def main(argv=None) -> int:
     ap.add_argument("--sharded", action="store_true",
                     help="validate BENCH_sharded.json against its frozen "
                          "baseline instead of re-measuring throughput")
+    ap.add_argument("--counter", action="store_true",
+                    help="validate BENCH_counter.json (SBF dense8 vs plane "
+                         "layout, incl. the >= 2x paper-scale gate)")
     args = ap.parse_args(argv)
     if args.sharded:
         return check_sharded(0.35 if args.tol is None else args.tol)
+    if args.counter:
+        return check_counter(0.35 if args.tol is None else args.tol)
     if args.tol is None:
         args.tol = 0.25
 

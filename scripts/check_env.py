@@ -29,8 +29,8 @@ _DEPENDENTS = {
     "make_mesh": "every mesh construction site (launch/mesh.py, tests, "
                  "examples)",
     "all_to_all": "the sharded dedup dispatch (repro.dedup.sharded)",
-    "pallas": "the fused single-launch step (repro.kernels.fused_step, "
-              "cfg.backend='pallas')",
+    "pallas": "the fused single-launch steps (repro.kernels.fused_step, "
+              "repro.kernels.fused_counter_step, cfg.backend='pallas')",
 }
 
 

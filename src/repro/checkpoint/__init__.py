@@ -1,5 +1,6 @@
-"""Fault-tolerant checkpointing."""
+"""Fault-tolerant checkpointing (+ filter-layout migration, DESIGN.md §3.6)."""
 
 from .manager import CheckpointManager
+from .migrate import layout_meta, migrate_filter_state
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "layout_meta", "migrate_filter_state"]

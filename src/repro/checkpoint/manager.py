@@ -8,6 +8,10 @@ Production behaviours implemented:
     exact pytree (params, optimizer moments, **dedup filter state including
     the stream position** — RSBF's insert probability s/i must survive
     restart, DESIGN.md §4);
+  * layout migration — ``save(extra_meta=layout_meta(cfg))`` stamps the
+    filter's cell layout into meta.json (read back via ``load_meta``), so a
+    dense8 checkpoint can be restored and re-encoded into the plane layout
+    with ``repro.checkpoint.migrate_filter_state`` (DESIGN.md §3.6);
   * host-sharded npz — leaves are gathered to host and stored flat; on
     restore they are ``device_put`` against the template's sharding, which is
     how a checkpoint moves between mesh shapes (elastic re-mesh).
@@ -126,6 +130,14 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def load_meta(self, step: int) -> dict:
+        """The checkpoint's meta.json — including any ``extra_meta`` stamped
+        at save time (e.g. the filter layout facts from
+        ``repro.checkpoint.layout_meta``, which is how a dense8 checkpoint
+        announces itself to a plane-layout engine for migration)."""
+        with open(os.path.join(self._path(step), "meta.json")) as f:
+            return json.load(f)
 
     def restore(self, step: int, template: Any) -> Any:
         path = self._path(step)

@@ -1,0 +1,93 @@
+"""Filter-state layout migration (DESIGN.md §3.6).
+
+A checkpoint written by a dense8 engine can be restored into a plane-layout
+engine (and back): the cell VALUES are the portable contract, the layout is
+an engine detail. ``layout_meta`` stamps the writing engine's layout into
+the checkpoint's ``meta.json`` (via ``CheckpointManager.save(extra_meta=…)``)
+so the restoring side knows what it is holding; ``migrate_filter_state``
+re-encodes the cells. Because the dense8 and plane engines are bit-identical
+(same probes, same rng threading, same cell values — tests/
+test_counter_planes.py), a stream resumed after migration continues exactly
+as if the layout had never changed.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.config import DedupConfig
+from ..core.packed import pack_bits, pack_cells, unpack_bits, unpack_cells
+from ..core.state import FilterState
+
+__all__ = ["layout_meta", "migrate_filter_state"]
+
+
+def _fresh(x):
+    """A copy backed by its own buffer. The engines DONATE states into
+    ``run_stream`` — if the migrated state aliased the source's leaves,
+    running either one would delete the other's buffers out from under it."""
+    try:
+        if jax.dtypes.issubdtype(x.dtype, jax.dtypes.prng_key):
+            return jax.random.wrap_key_data(
+                jnp.array(jax.random.key_data(x), copy=True))
+    except Exception:                                  # pragma: no cover
+        pass
+    return jnp.array(x, copy=True)
+
+
+def layout_meta(cfg: DedupConfig) -> dict:
+    """The layout facts a checkpoint must carry to be migratable later."""
+    return {
+        "filter_variant": cfg.variant,
+        "filter_layout": cfg.effective_layout,
+        "filter_planes": cfg.n_planes if cfg.is_planes else 0,
+        "filter_cells": cfg.s,
+        "filter_rows": cfg.n_rows,
+        "filter_max": cfg.sbf_max if cfg.variant == "sbf" else 1,
+    }
+
+
+def _cells_from_state(state: FilterState, cfg: DedupConfig) -> jnp.ndarray:
+    """Decode any layout to (n_rows, s) integer cell values."""
+    if not state.is_packed:                          # dense8: already cells
+        return state.bits.astype(jnp.int32)
+    if cfg.variant == "sbf":
+        planes = state.bits if state.bits.ndim == 3 else state.bits[None]
+        return unpack_cells(planes, cfg.s)
+    return unpack_bits(state.bits, cfg.s).astype(jnp.int32)
+
+
+def migrate_filter_state(state: FilterState, src_cfg: DedupConfig,
+                         dst_cfg: Optional[DedupConfig] = None) -> FilterState:
+    """Re-encode ``state`` from ``src_cfg``'s layout into ``dst_cfg``'s.
+
+    Everything except the cell encoding (position, load, rng) carries over
+    untouched — they are layout-independent. The two configs must describe
+    the same filter (variant/size/rows); only the layout/backend knobs may
+    differ.
+    """
+    dst_cfg = src_cfg if dst_cfg is None else dst_cfg
+    for field, a, b in (("variant", src_cfg.variant, dst_cfg.variant),
+                        ("s", src_cfg.s, dst_cfg.s),
+                        ("n_rows", src_cfg.n_rows, dst_cfg.n_rows),
+                        ("sbf_max", src_cfg.sbf_max, dst_cfg.sbf_max)):
+        if a != b:
+            raise ValueError(
+                f"cannot migrate between different filters: {field} "
+                f"{a!r} != {b!r}")
+    if src_cfg.effective_layout == dst_cfg.effective_layout:
+        bits = _fresh(state.bits)
+    else:
+        cells = _cells_from_state(state, src_cfg)        # (n_rows, s)
+        if dst_cfg.effective_layout == "dense8":
+            bits = cells.astype(jnp.uint8)
+        elif dst_cfg.variant == "sbf":
+            planes = pack_cells(cells, dst_cfg.n_planes)  # (d, n_rows, W)
+            bits = planes[0] if dst_cfg.n_planes == 1 else planes
+        else:
+            bits = pack_bits(cells.astype(jnp.uint8))     # (k, W)
+    return FilterState(bits=bits, position=_fresh(state.position),
+                       load=_fresh(state.load), rng=_fresh(state.rng))

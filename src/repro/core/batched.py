@@ -37,8 +37,10 @@ import jax.numpy as jnp
 
 from .config import DedupConfig
 from .hashing import derive_seeds, hash_positions
-from .packed import (delta_from_sorted_positions, popcount, probe_packed,
-                     probe_sorted_packed, run_heads)
+from .packed import (count_field_chunks, counts_to_planes,
+                     delta_from_sorted_positions, planes_nonzero,
+                     planes_saturating_sub, planes_set_value, popcount,
+                     probe_packed, probe_sorted_packed, run_heads, split_pos)
 from .state import FilterState
 
 
@@ -182,6 +184,153 @@ def load_delta_from_sorted(spi: jnp.ndarray, pre_i: jnp.ndarray,
     return (gained - lost).astype(jnp.int32)
 
 
+class SbfBatchDeltas(NamedTuple):
+    """One SBF batch's filter-touching events, reduced to word deltas
+    (DESIGN.md §3.6). Shared by the jnp plane step and the fused Pallas
+    counter kernel — both backends apply the SAME deltas, so they are
+    bit-identical by construction. The sorted event arrays ride along for
+    the jnp step's load accounting (the kernel ignores them — in one jitted
+    program the unused sorts are dead-code-eliminated)."""
+    count_planes: jnp.ndarray   # (d, W) uint32 — decrement counts per cell,
+                                #   clamped to Max, as bit-planes
+    set_delta: jnp.ndarray      # (W,) uint32 — OR-union of set-to-Max cells
+    dec_sorted: jnp.ndarray     # (B·P,) int32 — sorted decrement cells
+                                #   (sentinel 32W for invalid lanes)
+    dec_head: jnp.ndarray       # (B·P,) bool — first event of each cell
+    set_sorted: jnp.ndarray     # (B·k,) int32 — sorted set-to-Max cells
+    set_head: jnp.ndarray       # (B·k,) bool — first event of each cell
+
+
+def draw_sbf_randomness(cfg: DedupConfig, rng: jax.Array, b: int):
+    """SBF's per-batch randomness: the decrement-run start cells. The
+    split/draw order is frozen and identical to the dense8 branch (and, at
+    b == 1, to the sequential oracle) — part of the determinism contract."""
+    rng, r = jax.random.split(rng)
+    start = jax.random.randint(r, (b,), 0, cfg.s, dtype=jnp.int32)
+    return rng, start
+
+
+def _run_heads_1d(sp: jnp.ndarray) -> jnp.ndarray:
+    """(n,) sorted -> True at the first event of each equal-value run."""
+    return jnp.concatenate([jnp.ones((1,), bool), sp[1:] != sp[:-1]])
+
+
+def sbf_event_deltas(cfg: DedupConfig, pos: jnp.ndarray, start: jnp.ndarray,
+                     valid: jnp.ndarray) -> SbfBatchDeltas:
+    """Batch events -> word deltas through the sorted-position machinery.
+
+    Decrement runs: each valid element decrements the P contiguous cells
+    from its random start (wrapping) by 1, saturating at 0 — so a cell's
+    decrement is the NUMBER of runs covering it. The B·P run cells are
+    sorted (one value-free sort, §3.1 discipline); a cell's multiplicity is
+    read off the sorted array with Max-1 shifted equality compares (clamping
+    to Max is lossless under saturation since value <= Max); each cell's
+    HEAD event scatter-ADDs its count once, packed as a d-bit field
+    (``counts_to_planes`` layout) — heads are unique per cell, so fields
+    never collide and one scatter entry per event replaces both the
+    segmented scan and any read-modify-write. Set-to-Max cells build their
+    OR-union delta the same way: head-only single-bit masks are disjoint
+    within a word, so scatter-add IS the OR (§3.2/§3.6). O(B·P log(B·P))
+    event work, no O(s) buffer anywhere.
+    """
+    s, W = cfg.s, cfg.s_words
+    d, cmax, p_run = cfg.n_planes, cfg.sbf_max, cfg.sbf_p_effective
+    sentinel = 32 * W
+    run = (start[:, None] + jnp.arange(p_run, dtype=jnp.int32)) % s  # (B, P)
+    spd = jnp.sort(jnp.where(valid[:, None], run, sentinel).reshape(-1))
+    # clamped multiplicity: 1 + #{r < Max : spd[i] == spd[i+r]} — exact for
+    # the head of every run once clamped to Max
+    ext = jnp.concatenate([spd, jnp.full((max(cmax - 1, 1),), -1, spd.dtype)])
+    n = spd.shape[0]
+    cnt = jnp.ones((n,), jnp.uint32)
+    for r in range(1, cmax):
+        cnt = cnt + (spd == ext[r:r + n]).astype(jnp.uint32)
+    dec_head = _run_heads_1d(spd)
+    cpc = 32 // d
+    nc = count_field_chunks(d)
+    t = (spd & 31).astype(jnp.uint32)
+    fidx = (spd >> 5) * nc + (t // cpc).astype(jnp.int32)  # sentinel -> >= W·nc
+    fval = jnp.where(dec_head, cnt, jnp.uint32(0)) << (d * (t % cpc))
+    acc = jnp.zeros((W * nc,), jnp.uint32).at[fidx].add(fval, mode="drop")
+    count_planes = counts_to_planes(acc, d, W)                     # (d, W)
+    # set-to-Max OR delta: head-only masks are disjoint bits per word
+    sps = jnp.sort(jnp.where(valid[:, None], pos, sentinel).reshape(-1))
+    set_head = _run_heads_1d(sps)
+    smask = jnp.where(set_head,
+                      jnp.uint32(1) << (sps & 31).astype(jnp.uint32),
+                      jnp.uint32(0))
+    set_delta = jnp.zeros((W,), jnp.uint32).at[sps >> 5].add(
+        smask, mode="drop")                                        # (W,)
+    return SbfBatchDeltas(count_planes, set_delta, spd, dec_head, sps,
+                          set_head)
+
+
+def sbf_planes_3d(bits: jnp.ndarray) -> jnp.ndarray:
+    """Normalize an SBF plane state to (d, 1, W) — Max == 1 squeezes d."""
+    return bits if bits.ndim == 3 else bits[None]
+
+
+def make_sbf_planes_step(cfg: DedupConfig) -> BatchedStep:
+    """SBF on the plane layout (DESIGN.md §3.6) — bit-identical to the
+    dense8 SBF branch (same probes, same rng draws, same snapshot
+    semantics, same cell values and load), with every filter touch a word
+    op: multi-plane OR gather probe, borrow-chain saturating decrement,
+    one-pass set-to-Max, and exact incremental load from the touched
+    words' nonzero popcount delta (no O(s) reduce — the dense8 branch's
+    recount was the last one standing)."""
+    cfg = cfg.validate()
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    s, W, cmax = cfg.s, cfg.s_words, cfg.sbf_max
+    squeeze = cfg.n_planes == 1
+
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+        b = keys.shape[0]
+        planes = sbf_planes_3d(state.bits)[:, 0, :]               # (d, W)
+        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)   # (B, k)
+        nzw = planes_nonzero(planes)                              # (W,)
+        w_idx, mask = split_pos(pos)
+        vals = (nzw[w_idx] & mask) != 0                           # (B, k)
+        dup = jnp.all(vals, axis=1) & valid
+        rng, start = draw_sbf_randomness(cfg, state.rng, b)
+        ev = sbf_event_deltas(cfg, pos, start, valid)
+        new = planes_saturating_sub(planes, ev.count_planes)
+        new = planes_set_value(new, ev.set_delta, cmax)
+        if cfg.debug_exact_load:
+            load = popcount(planes_nonzero(new)[None])
+        else:
+            # exact incremental load (nonzero-cell count), PR-1 style event
+            # accounting from pre/post values at the sorted events (§3.1):
+            #   gained — set cells whose PRE value was zero (they end at Max);
+            #   lost   — decremented cells that were nonzero and whose POST
+            #            nonzero bit is clear (decayed to zero, not re-set —
+            #            sets apply after decrements, so the post bit IS the
+            #            "was it refreshed" flag).
+            # Each cell counts once (run heads); batch-sized gathers only.
+            new_nz = planes_nonzero(new)
+            sentinel = 32 * W
+
+            def nz_bit(words, sp):
+                got = words[jnp.minimum(sp >> 5, W - 1)]
+                return (got >> (sp & 31).astype(jnp.uint32)) & jnp.uint32(1)
+
+            gained = jnp.sum(ev.set_head & (ev.set_sorted < sentinel)
+                             & (nz_bit(nzw, ev.set_sorted) == 0),
+                             dtype=jnp.int32)
+            lost = jnp.sum(ev.dec_head & (ev.dec_sorted < sentinel)
+                           & (nz_bit(nzw, ev.dec_sorted) == 1)
+                           & (nz_bit(new_nz, ev.dec_sorted) == 0),
+                           dtype=jnp.int32)
+            load = state.load + gained - lost
+        bits = new[:, None, :] if not squeeze else new
+        n_valid = valid.sum(dtype=jnp.int32)
+        return (FilterState(bits, state.position + n_valid, load, rng),
+                BatchResult(dup=dup, inserted=valid))
+
+    return step
+
+
 def make_batched_step(cfg: DedupConfig) -> BatchedStep:
     cfg = cfg.validate()
     seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
@@ -190,10 +339,14 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
     s, k = cfg.s, cfg.k
     rows = jnp.arange(k, dtype=jnp.int32)
 
-    # ---------------- SBF baseline (counter cells, unpacked only) -------- //
+    # ---------------- SBF (counter cells) -------------------------------- //
     if cfg.variant == "sbf":
-        if cfg.packed:
-            raise ValueError("SBF uses counters; packed layout unsupported")
+        if cfg.is_planes:
+            if cfg.backend == "pallas":
+                from ..kernels.fused_counter_step import \
+                    make_fused_counter_step
+                return make_fused_counter_step(cfg)
+            return make_sbf_planes_step(cfg)
         p_run, cmax = cfg.sbf_p_effective, cfg.sbf_max
 
         def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
@@ -201,8 +354,7 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
             pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)                  # (B, k)
             vals = state.bits[0, pos]                             # (B, k)
             dup = jnp.all(vals > 0, axis=1) & valid
-            rng, r = jax.random.split(state.rng)
-            start = jax.random.randint(r, (b,), 0, s, dtype=jnp.int32)
+            rng, start = draw_sbf_randomness(cfg, state.rng, b)
             run = (start[:, None] + jnp.arange(p_run, dtype=jnp.int32)) % s
             run = jnp.where(valid[:, None], run, s)               # drop pads
             dec = jnp.zeros((s,), jnp.int32).at[run.reshape(-1)].add(
@@ -233,14 +385,14 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
     sentinel = 32 * ((s + 31) // 32)
 
     def probe(bits, pos):
-        if cfg.packed:
+        if cfg.is_planes:
             return probe_packed(bits, pos)                        # (B, k)
         return bits[rows[None, :], pos]
 
     def probe_sorted(bits, sp):
         """Row-aligned probe of (k, B) sorted positions; sentinels clamp and
         must be masked by the caller (load_delta_from_sorted does)."""
-        if cfg.packed:
+        if cfg.is_planes:
             return probe_sorted_packed(bits, sp)
         return bits[rows[:, None], jnp.minimum(sp, s - 1)]
 
@@ -248,7 +400,7 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
         """Deletions from the snapshot, then insertions (insertions win):
         R = (A & ~D) | I. Packed builds both deltas from the already-sorted
         positions and applies them in ONE elementwise pass."""
-        if cfg.packed:
+        if cfg.is_planes:
             W = bits.shape[1]
             delta_i = delta_from_sorted_positions(spi, W)
             delta_d = delta_from_sorted_positions(spd, W)
@@ -261,7 +413,7 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
 
     def recompute_load(bits):
         # debug escape hatch only — O(s) reduce over the whole filter
-        if cfg.packed:
+        if cfg.is_planes:
             return popcount(bits)
         return bits.astype(jnp.int32).sum(axis=1)
 

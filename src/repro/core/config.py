@@ -70,10 +70,20 @@ class DedupConfig:
     sbf_p: Optional[int] = None          # eviction count; None => optimal
     # --- engine knobs ---
     batch_size: int = 8192               # batched-engine width
-    packed: bool = False                 # uint32-packed words vs uint8/bit
+    layout: str = "auto"                 # "auto" | "dense8" | "planes" — cell
+                                         # layout (DESIGN §3.6): dense8 = one
+                                         # uint8 per cell (reference); planes =
+                                         # d uint32 bit-planes of (k, W) words
+                                         # (d=1 for 1-bit variants — the packed
+                                         # word layout — d=bits_per_cell for
+                                         # SBF's counters). "auto" derives the
+                                         # layout from ``packed``.
+    packed: bool = False                 # back-compat alias: packed=True with
+                                         # layout="auto" selects the plane
+                                         # layout (all variants, incl. SBF)
     backend: str = "jnp"                 # "jnp" | "pallas" — batched-step impl
                                          # (pallas = fused single-launch kernel,
-                                         # packed 1-bit variants only; DESIGN §3.4)
+                                         # plane layouts only; DESIGN §3.4/§3.6)
     block_bits: int = 0                  # >0: blocked layout, 2^b-bit blocks
                                          # (VMEM-tile locality; DESIGN §3.3)
     delete_set_bits_only: bool = False   # phase-3 RSBF "find a set bit" (scan engine)
@@ -89,6 +99,25 @@ class DedupConfig:
         if self.variant == "sbf":
             return max(1, (self.sbf_max).bit_length())
         return 1
+
+    @property
+    def effective_layout(self) -> str:
+        """Resolved cell layout: ``layout`` wins; "auto" maps ``packed`` to
+        the plane layout and everything else to dense8."""
+        if self.layout == "auto":
+            return "planes" if self.packed else "dense8"
+        return self.layout
+
+    @property
+    def is_planes(self) -> bool:
+        return self.effective_layout == "planes"
+
+    @property
+    def n_planes(self) -> int:
+        """Bit-planes of the plane layout: d = bits_per_cell (1 for the 1-bit
+        variants — exactly the packed word layout; ceil(log2(Max+1)) for
+        SBF's counters)."""
+        return self.bits_per_cell
 
     @property
     def s(self) -> int:
@@ -131,10 +160,18 @@ class DedupConfig:
             raise ValueError("filter too small: raise memory_bits or lower k/shards")
         if not (0.0 < self.p_star < 1.0):
             raise ValueError("p_star in (0,1)")
+        if self.layout not in ("auto", "dense8", "planes"):
+            raise ValueError(
+                f"layout {self.layout!r}; one of ('auto', 'dense8', 'planes')")
+        if self.layout == "dense8" and self.packed:
+            raise ValueError("layout='dense8' contradicts packed=True "
+                             "(packed is the legacy alias for the plane "
+                             "layout)")
         if self.backend not in ("jnp", "pallas"):
             raise ValueError(f"backend {self.backend!r}; one of ('jnp', 'pallas')")
-        if self.backend == "pallas" and (not self.packed or self.variant == "sbf"):
-            raise ValueError("pallas backend requires packed=True and a 1-bit variant")
+        if self.backend == "pallas" and not self.is_planes:
+            raise ValueError("pallas backend requires the plane layout "
+                             "(layout='planes' or packed=True)")
         return self
 
     @staticmethod

@@ -41,7 +41,7 @@ class Dedup:
         self.cfg = cfg.validate()
         self._step = make_batched_step(cfg)
         self._batched = jax.jit(self._step)
-        if not cfg.packed:
+        if cfg.effective_layout == "dense8":
             self._scan_step = make_scan_step(cfg)
         self._stream = jax.jit(self._stream_impl, donate_argnums=0)
 
@@ -92,8 +92,8 @@ class Dedup:
     def run_stream_oracle(self, state: FilterState, keys: jnp.ndarray
                           ) -> Tuple[FilterState, jnp.ndarray]:
         """Sequential per-element oracle (paper pseudocode order)."""
-        if self.cfg.packed:
-            raise ValueError("oracle runs on the unpacked layout")
+        if self.cfg.effective_layout != "dense8":
+            raise ValueError("oracle runs on the dense8 layout")
         state, dups = jax.lax.scan(
             self._scan_step, state, keys.astype(jnp.uint32))
         return state, dups

@@ -1,14 +1,21 @@
-"""uint32-packed bit operations.
+"""uint32-packed cell operations — the word side of the plane layout.
 
-TPUs have no efficient random single-bit scatter; the packed layout stores 32
-bits per lane word and performs:
+TPUs have no efficient random single-bit scatter; the plane layout stores 32
+cells per lane word (d bit-planes per cell, d == 1 for plain bits) and
+performs:
 
-  * probe:   word gather (lowers to dynamic-slice) + mask test
+  * probe:   word gather (lowers to dynamic-slice) + mask test — multi-plane
+    states OR their planes' gathered words first (nonzero test)
   * set/clear scatter: sort the batch's word indices, OR together the
     single-bit masks of each equal-index run with one segmented scan, and
     scatter exactly one uint32 per touched word (``_bit_delta_rows``). This is
     O(B log B) work and O(B) scatter entries — no per-bit decomposition, no
     (B·k, 32) uint8 intermediate (DESIGN.md §3.2).
+  * counter arithmetic (DESIGN.md §3.6): saturating increment/decrement and
+    set-to-value expressed as carry/borrow chains of the same
+    ``(A & ~D) | I`` word ops — ``planes_saturating_sub/add``,
+    ``planes_set_value`` — so SBF's counters ride the exact machinery the
+    1-bit variants already use.
 
 The Pallas kernels in ``repro.kernels`` implement the same contracts with
 explicit VMEM tiling; these jnp forms are their oracles and the fallback path.
@@ -22,7 +29,10 @@ import jax.numpy as jnp
 __all__ = [
     "pack_bits", "unpack_bits", "split_pos", "probe_packed",
     "delta_from_sorted_positions", "probe_sorted_packed",
-    "scatter_or", "scatter_andnot", "popcount",
+    "scatter_or", "scatter_andnot", "popcount", "popcount_words",
+    "pack_cells", "unpack_cells", "planes_nonzero",
+    "count_field_chunks", "counts_to_planes",
+    "planes_saturating_sub", "planes_saturating_add", "planes_set_value",
 ]
 
 _BIT = jnp.uint32(1)
@@ -159,11 +169,139 @@ def scatter_andnot(words: jnp.ndarray, w_idx: jnp.ndarray, mask: jnp.ndarray) ->
     return words & ~_bit_delta_rows(W, w_idx, mask)
 
 
-def popcount(words: jnp.ndarray) -> jnp.ndarray:
-    """Per-row population count: (k, W) uint32 -> (k,) int32."""
+def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise per-word population count: uint32 -> int32, same shape."""
     x = words
     x = x - ((x >> 1) & jnp.uint32(0x55555555))
     x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
     x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
     x = (x * jnp.uint32(0x01010101)) >> 24
-    return x.astype(jnp.int32).sum(axis=-1)
+    return x.astype(jnp.int32)
+
+
+def popcount(words: jnp.ndarray) -> jnp.ndarray:
+    """Per-row population count: (k, W) uint32 -> (k,) int32."""
+    return popcount_words(words).sum(axis=-1)
+
+
+# ------------------------------------------------------------------ planes //
+# Counter cells as d uint32 bit-planes (DESIGN.md §3.6): plane p holds bit p
+# of every cell's value, 32 cells per lane word. All arithmetic below is
+# pure word-parallel boolean algebra — the "scatter" halves stay the delta
+# machinery above; these are the elementwise combine laws.
+
+def pack_cells(cells: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(..., s) integer cells in [0, 2^d) -> (d, ..., W) uint32 bit-planes."""
+    cells = cells.astype(jnp.uint32)
+    return jnp.stack(
+        [pack_bits(((cells >> p) & jnp.uint32(1)).astype(jnp.uint8))
+         for p in range(d)])
+
+
+def unpack_cells(planes: jnp.ndarray, s: int) -> jnp.ndarray:
+    """(d, ..., W) uint32 bit-planes -> (..., s) int32 cell values."""
+    out = None
+    for p in range(planes.shape[0]):
+        bit = unpack_bits(planes[p], s).astype(jnp.int32) << p
+        out = bit if out is None else out + bit
+    return out
+
+
+def planes_nonzero(planes: jnp.ndarray) -> jnp.ndarray:
+    """(d, ..., W) -> (..., W) uint32 word with bit j set iff cell j != 0.
+    Python-unrolled OR — no reduce op over any filter-sized axis."""
+    nz = planes[0]
+    for p in range(1, planes.shape[0]):
+        nz = nz | planes[p]
+    return nz
+
+
+def count_field_chunks(d: int) -> int:
+    """Chunk words per filter word for the d-bit count-field accumulator."""
+    return -(-32 // (32 // d))
+
+
+def counts_to_planes(acc: jnp.ndarray, d: int, w: int) -> jnp.ndarray:
+    """(W·n_chunks,) uint32 count-field accumulator -> (d, W) bit-planes.
+
+    The scatter side packs each cell's clamped count as a d-bit field:
+    chunk word ``w·n_chunks + c`` holds cells ``[c·cpc, (c+1)·cpc)`` of
+    filter word w at bit offsets ``d·t_local`` (cpc = 32 // d cells per
+    chunk). One field per cell means one scatter-ADD entry per touched cell
+    — no read-modify-write, no segmented scan. This function is the pure
+    elementwise unscramble back to bit-plane form; d == 2 (Max = 2..3, the
+    Deng & Rafiei setting) takes a 5-step bit-compaction fast path.
+    """
+    if d == 1:
+        return acc.reshape(1, w)
+    nc = count_field_chunks(d)
+    a = acc.reshape(w, nc)
+    if d == 2:
+        planes = []
+        for q in range(2):
+            halves = []
+            for c in range(2):
+                x = (a[:, c] >> q) & jnp.uint32(0x55555555)
+                x = (x | (x >> 1)) & jnp.uint32(0x33333333)
+                x = (x | (x >> 2)) & jnp.uint32(0x0F0F0F0F)
+                x = (x | (x >> 4)) & jnp.uint32(0x00FF00FF)
+                x = (x | (x >> 8)) & jnp.uint32(0x0000FFFF)
+                halves.append(x)
+            planes.append(halves[0] | (halves[1] << 16))
+        return jnp.stack(planes)
+    cpc = 32 // d
+    planes = []
+    for q in range(d):
+        p = jnp.zeros((w,), jnp.uint32)
+        for t in range(32):
+            c, tl = t // cpc, t % cpc
+            p = p | (((a[:, c] >> (d * tl + q)) & jnp.uint32(1)) << t)
+        planes.append(p)
+    return jnp.stack(planes)
+
+
+def planes_saturating_sub(planes: jnp.ndarray, counts: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """Per-cell ``max(value - count, 0)`` as a borrow chain of word ops.
+
+    planes (d, ..., W): value bit-planes; counts (d, ..., W): subtrahend
+    bit-planes, each count already clamped into [0, 2^d) (clamping to Max is
+    lossless for the saturated result since value <= Max). The final borrow
+    word marks cells where count exceeded the value — those saturate to 0.
+    """
+    d = planes.shape[0]
+    assert counts.shape[0] == d, (planes.shape, counts.shape)
+    borrow = jnp.zeros_like(planes[0])
+    diffs = []
+    for p in range(d):
+        a, c = planes[p], counts[p]
+        diffs.append(a ^ c ^ borrow)
+        borrow = (~a & (c | borrow)) | (c & borrow)
+    return jnp.stack([dp & ~borrow for dp in diffs])
+
+
+def planes_saturating_add(planes: jnp.ndarray, addend: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """Per-cell ``min(value + addend, 2^d - 1)`` as a carry chain of word
+    ops (the increment dual of ``planes_saturating_sub``; counting-filter
+    building block). Overflowing cells saturate to the all-ones value."""
+    d = planes.shape[0]
+    assert addend.shape[0] == d, (planes.shape, addend.shape)
+    carry = jnp.zeros_like(planes[0])
+    sums = []
+    for p in range(d):
+        a, c = planes[p], addend[p]
+        sums.append(a ^ c ^ carry)
+        carry = (a & c) | (a & carry) | (c & carry)
+    return jnp.stack([sp | carry for sp in sums])
+
+
+def planes_set_value(planes: jnp.ndarray, delta: jnp.ndarray, value: int
+                     ) -> jnp.ndarray:
+    """Set every cell selected by the OR-union ``delta`` word to ``value``:
+    plane p gets ``(A | delta)`` where value's bit p is 1, ``(A & ~delta)``
+    where it is 0 — the same one-pass ``(A & ~D) | I`` form as the 1-bit
+    update (DESIGN.md §3.2/§3.6)."""
+    return jnp.stack(
+        [(planes[p] | delta) if (value >> p) & 1 else (planes[p] & ~delta)
+         for p in range(planes.shape[0])])

@@ -1,10 +1,15 @@
 """Filter state pytrees.
 
-``bits`` layout depends on the engine:
-  * unpacked ("dense8"): (k, s) uint8 — one byte per bit (per cell for SBF,
-    holding the counter value). Simple scatters; the reference layout.
-  * packed: (k, W) uint32 — 32 bits per lane word; probed via gather + mask,
-    updated via per-bit scatter-max (see packed.py) or the Pallas kernels.
+``bits`` layout depends on ``cfg.effective_layout`` (DESIGN.md §3.6):
+  * "dense8": (k, s) uint8 — one byte per bit (per cell for SBF, holding the
+    counter value). Simple scatters; the reference layout.
+  * "planes": d bit-planes of (k, W) uint32 words, 32 cells per lane word.
+    For the 1-bit variants d == 1 and the plane axis is squeezed — (k, W),
+    bit-for-bit the historical packed layout. For SBF d == bits_per_cell and
+    the state is the full (d, 1, W) stack: cell j's counter is
+    sum_p plane[p] bit j << p. Probed via multi-plane gather + mask, updated
+    via carry/borrow chains of word ops (see packed.py) or the Pallas
+    kernels.
 
 ``position`` is the 1-indexed stream position ``i`` of the *next* element —
 RSBF's insert probability is s/i, so it must survive checkpoint/restart
@@ -22,23 +27,32 @@ from .config import DedupConfig
 
 
 class FilterState(NamedTuple):
-    bits: jnp.ndarray       # (k, s) uint8   or  (k, W) uint32 when packed
+    bits: jnp.ndarray       # (k, s) uint8 | (k, W) uint32 | (d, k, W) uint32
     position: jnp.ndarray   # () int32 — 1-indexed next stream position
-    load: jnp.ndarray       # (k,) int32 — number of set bits (RLBSBF's L(i))
+    load: jnp.ndarray       # (k,) int32 — set bits (nonzero cells for SBF)
     rng: jax.Array          # PRNG key for the randomized deletions
 
     @property
     def is_packed(self) -> bool:
         return self.bits.dtype == jnp.uint32
 
+    @property
+    def n_planes(self) -> int:
+        """Bit-planes of the word layout (1 unless the state holds counters)."""
+        return self.bits.shape[0] if self.bits.ndim == 3 else 1
+
 
 def init_state(cfg: DedupConfig, seed: int | None = None) -> FilterState:
     cfg.validate()
     seed = cfg.seed if seed is None else seed
-    if cfg.packed:
-        if cfg.variant == "sbf":
-            raise ValueError("packed layout supports 1-bit variants only (SBF has counters)")
-        bits = jnp.zeros((cfg.n_rows, cfg.s_words), dtype=jnp.uint32)
+    if cfg.is_planes:
+        d = cfg.n_planes
+        if d > 1:
+            bits = jnp.zeros((d, cfg.n_rows, cfg.s_words), dtype=jnp.uint32)
+        else:
+            # d == 1: squeeze the plane axis — bit-identical to the packed
+            # word layout every 1-bit code path (and test) already speaks
+            bits = jnp.zeros((cfg.n_rows, cfg.s_words), dtype=jnp.uint32)
     else:
         bits = jnp.zeros((cfg.n_rows, cfg.s), dtype=jnp.uint8)
     return FilterState(

@@ -43,8 +43,8 @@ def _probe_rows(cfg: DedupConfig) -> jnp.ndarray:
 
 def make_scan_step(cfg: DedupConfig) -> Step:
     cfg = cfg.validate()
-    if cfg.packed:
-        raise ValueError("scan oracle runs on the unpacked (dense8) layout")
+    if cfg.effective_layout != "dense8":
+        raise ValueError("scan oracle runs on the dense8 layout")
     seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
     bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
               if cfg.block_bits else None)

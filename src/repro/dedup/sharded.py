@@ -16,8 +16,11 @@ the beyond-paper distribution design (DESIGN.md §4):
     B/S >= 16; the monitor in metrics.py tracks it.
   * The per-shard work is the SAME batched step as the single-device engine
     (``core.batched.make_batched_step``) — including the exact incremental
-    load tracking (§3.1) and the fused Pallas backend when
-    ``base.backend="pallas"`` — applied below the leading shard axis.
+    load tracking (§3.1), the fused Pallas backend when
+    ``base.backend="pallas"``, and SBF's counter-plane layout with its
+    fused counter kernel (§3.6) — applied below the leading shard axis.
+    The plane-stacked ``(d, 1, W)`` SBF state rides the generic pytree
+    plumbing (shard axis prepended, donated, aliased) untouched.
   * ``run_stream`` mirrors the single-device engine (§3.5): one cached
     jitted ``lax.scan`` over batches with the sharded ``FilterState``
     *donated* and aliased in place, so a multi-batch sharded stream is ONE

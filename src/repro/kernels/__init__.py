@@ -6,6 +6,9 @@ scatter_delta — compare-broadcast packed bit scatter (OR / AND-NOT deltas)
 fused_step    — the production path: probe + decide + ANDNOT + OR + load
                 delta in ONE pallas_call with the filter VMEM-resident and
                 aliased in place (selected via ``DedupConfig.backend=\"pallas\"``)
+fused_counter_step — the counter-plane twin for SBF: probe + saturating
+                decrement + set-to-Max + load delta in ONE pallas_call, all
+                d planes VMEM-resident and aliased in place (DESIGN.md §3.6)
 
 ``ops`` holds the jitted wrappers (interpret=True off-TPU), ``ref`` the
 pure-jnp oracles the tests sweep against.
@@ -16,6 +19,7 @@ from .hashmix import hashmix
 from .bloom_probe import bloom_probe
 from .scatter_delta import scatter_delta
 from .fused_step import make_fused_batched_step
+from .fused_counter_step import make_fused_counter_step
 
 __all__ = ["ops", "ref", "hashmix", "bloom_probe", "scatter_delta",
-           "make_fused_batched_step"]
+           "make_fused_batched_step", "make_fused_counter_step"]

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: single-launch fused SBF counter step (DESIGN.md §3.6).
+
+One ``pallas_call`` performs, with all d counter bit-planes VMEM-resident:
+
+  1. probe        — gather one uint32 word per (element, probe) from EVERY
+                    plane, OR them (nonzero test), test the cell's bit;
+  2. decide       — SBF's duplicate verdict (all K probed cells nonzero);
+  3. decrement    — borrow-chain saturating subtract of the decrement-run
+                    count planes (``planes_saturating_sub``, the SAME word
+                    algebra the jnp plane step traces — single source of
+                    truth, bit-identical by construction);
+  4. set-to-Max   — one ``(A & ~D) | I``-form pass per plane
+                    (``planes_set_value``);
+  5. load         — exact nonzero-cell delta from the tile's pre/post
+                    nonzero words (``popcount(post_nz) − popcount(pre_nz)``)
+                    while the tile is already in registers.
+
+The batch's decrement runs and set cells are reduced to word deltas OUTSIDE
+the kernel by ``core.batched.sbf_event_deltas`` — that is O(B·P log(B·P))
+event work over batch-sized buffers (sorting does not belong in a kernel);
+the kernel is the only code that touches the filter planes, and touches them
+exactly once (planes in, planes out, ``input_output_aliases`` in place). The
+jnp plane step pays separate HBM passes over the planes for probe, subtract,
+set and the load gathers; this kernel pays one.
+
+Layout/tiling mirror ``fused_step.py``: whole (d, 1, W) plane stack
+VMEM-resident — wrapper enforces (2d+1)·W·4 <= 8 MiB (planes + count planes
++ set delta; larger filters shard across devices first, repro.dedup.sharded)
+— and the update sweeps W in tiles of TW <= 512.
+
+Off-TPU the kernel runs in interpret mode and is validated bit-exactly
+against the jnp plane step (and the dense8 reference) in
+tests/test_counter_planes.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.batched import (BatchResult, draw_sbf_randomness, sbf_event_deltas,
+                            sbf_planes_3d)
+from ..core.hashing import derive_seeds, hash_positions
+from ..core.packed import (planes_saturating_sub, planes_set_value,
+                           popcount_words, split_pos)
+from ..core.state import FilterState
+from .fused_step import DEFAULT_TILE_W, VMEM_FILTER_BYTES_LIMIT, _largest_tile
+
+
+def _popcount_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Total set bits of a uint32 vector -> int32 scalar (traced in-kernel;
+    same word algebra as the jnp step by construction)."""
+    return popcount_words(x).sum()
+
+
+def make_fused_counter_step(cfg, *, tile_w: int = DEFAULT_TILE_W,
+                            interpret: bool | None = None):
+    """BatchedStep for ``cfg.backend == "pallas"`` with SBF's counter planes
+    — same signature and bit-identical results as the jnp plane step."""
+    cfg = cfg.validate()
+    assert cfg.variant == "sbf" and cfg.is_planes, cfg
+    s, w = cfg.s, cfg.s_words
+    d, cmax = cfg.n_planes, cfg.sbf_max
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    k = cfg.k
+    squeeze = d == 1
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+        b = keys.shape[0]
+        planes = sbf_planes_3d(state.bits)                       # (d, 1, W)
+        if (2 * d + 1) * w * 4 > VMEM_FILTER_BYTES_LIMIT:
+            raise ValueError(
+                f"counter planes + deltas {(2 * d + 1) * w * 4} B exceed the "
+                f"{VMEM_FILTER_BYTES_LIMIT} B VMEM budget for the fused "
+                f"counter step — shard the filter (repro.dedup.sharded) first")
+        tw = _largest_tile(w, tile_w)
+        n_tiles = w // tw
+
+        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)  # (B, k)
+        iw, im = split_pos(pos)
+        rng, start = draw_sbf_randomness(cfg, state.rng, b)
+        ev = sbf_event_deltas(cfg, pos, start, valid)
+
+        def kernel(planes_ref, cnt_ref, set_ref, iw_ref, im_ref, valid_ref,
+                   load_ref, out_ref, dup_ref, load_out_ref):
+            iw_ = iw_ref[...]
+            im_ = im_ref[...]
+            valid_ = valid_ref[...] != 0
+            rows = [planes_ref[p, 0, :] for p in range(d)]
+            # --- probe: nonzero test = OR of every plane's gathered word -- //
+            dup = valid_
+            for f in range(k):
+                got = rows[0][iw_[:, f]]
+                for p in range(1, d):
+                    got = got | rows[p][iw_[:, f]]
+                dup = dup & ((got & im_[:, f]) != 0)
+            dup_ref[...] = dup.astype(jnp.int32)
+
+            # --- fused decrement + set-to-Max + load sweep ---------------- //
+            def tile_body(t, dload):
+                base = t * tw
+                a = jnp.stack([jax.lax.dynamic_slice(rows[p], (base,), (tw,))
+                               for p in range(d)])
+                c = jnp.stack(
+                    [jax.lax.dynamic_slice(cnt_ref[p, :], (base,), (tw,))
+                     for p in range(d)])
+                i = jax.lax.dynamic_slice(set_ref[...], (base,), (tw,))
+                r = planes_set_value(planes_saturating_sub(a, c), i, cmax)
+                pre_nz, post_nz = a[0], r[0]
+                for p in range(d):
+                    out_ref[p, 0, pl.ds(base, tw)] = r[p]
+                    if p:
+                        pre_nz = pre_nz | a[p]
+                        post_nz = post_nz | r[p]
+                return dload + _popcount_sum(post_nz) - _popcount_sum(pre_nz)
+
+            dload = jax.lax.fori_loop(0, n_tiles, tile_body, jnp.int32(0))
+            load_out_ref[0] = load_ref[0] + dload
+
+        new_planes, dup_i, new_load = pl.pallas_call(
+            kernel,
+            out_shape=[
+                jax.ShapeDtypeStruct((d, 1, w), jnp.uint32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((1,), jnp.int32),
+            ],
+            input_output_aliases={0: 0},     # planes updated in place
+            interpret=interpret,
+        )(planes, ev.count_planes, ev.set_delta, iw, im,
+          valid.astype(jnp.int32), state.load)
+
+        bits = new_planes[0] if squeeze else new_planes
+        n_valid = valid.sum(dtype=jnp.int32)
+        new = FilterState(bits, state.position + n_valid, new_load, rng)
+        return new, BatchResult(dup=dup_i != 0, inserted=valid)
+
+    return step

@@ -28,6 +28,10 @@ Layout/tiling (DESIGN.md §3.4):
 
 Off-TPU the kernel runs in interpret mode and is validated bit-exactly
 against the jnp packed backend in tests/test_fused_step.py.
+
+This kernel serves the 1-bit variants (single-plane layout); SBF's counter
+planes have a twin with the same contracts in ``fused_counter_step.py``
+(DESIGN.md §3.6).
 """
 
 from __future__ import annotations

@@ -81,9 +81,20 @@ def test_fused_step_vmem_budget_guard():
 def test_backend_validation():
     with pytest.raises(ValueError, match="pallas"):
         DedupConfig.for_variant("rlbsbf", memory_bits=1 << 13,
-                                backend="pallas").validate()  # not packed
+                                backend="pallas").validate()  # dense8 layout
     with pytest.raises(ValueError, match="pallas"):
-        DedupConfig(variant="sbf", memory_bits=1 << 13,
-                    backend="pallas", packed=True).validate()
+        DedupConfig(variant="sbf", memory_bits=1 << 13, backend="pallas",
+                    layout="dense8").validate()
+    # SBF counters are first-class on the plane layout (DESIGN §3.6): the
+    # historical "packed is 1-bit only" guard rail is gone
+    DedupConfig(variant="sbf", memory_bits=1 << 13,
+                backend="pallas", packed=True).validate()
+    DedupConfig(variant="sbf", memory_bits=1 << 13,
+                backend="pallas", layout="planes").validate()
     with pytest.raises(ValueError, match="backend"):
         DedupConfig(memory_bits=1 << 13, backend="tpu").validate()
+    with pytest.raises(ValueError, match="layout"):
+        DedupConfig(memory_bits=1 << 13, layout="bitplane").validate()
+    with pytest.raises(ValueError, match="dense8"):
+        DedupConfig(memory_bits=1 << 13, layout="dense8",
+                    packed=True).validate()

@@ -68,6 +68,48 @@ def test_dense8_step_has_no_filter_sized_reduce():
     assert not [d for d in dims if d >= cfg.s]
 
 
+# the counter-step bar (DESIGN §3.6): W well above every batch-event buffer
+# (B·P decrement events, B·k set events) so the thresholds separate
+COUNTER_CFG = dict(memory_bits=1 << 23, batch_size=1024, layout="planes")
+
+
+def test_no_filter_sized_reduce_in_counter_step():
+    """The SBF plane step's load is tracked from batch-event pre/post
+    gathers — the compiled steady-state step must not reduce over any
+    buffer as large as a plane (W words). The dense8 SBF branch's O(s)
+    recount must NOT sneak back in through the plane path."""
+    cfg = DedupConfig.for_variant("sbf", **COUNTER_CFG)
+    w = cfg.s_words
+    n_events = cfg.batch_size * max(cfg.sbf_p_effective, cfg.k)
+    assert n_events < w        # thresholds separated by construction
+    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
+    big = [d for d in dims if d >= w]
+    assert not big, f"O(s) reduction over the counter planes: {big}"
+
+
+def test_counter_debug_exact_load_does_popcount_reduce():
+    """Detector sanity: the escape hatch DOES reduce over the planes."""
+    cfg = DedupConfig.for_variant("sbf", debug_exact_load=True, **COUNTER_CFG)
+    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
+    assert any(d >= cfg.s_words for d in dims)
+
+
+def test_counter_stream_donates_and_aliases_plane_state():
+    """The SBF plane state (d, 1, W) is donated and aliased in place by the
+    stream scan, same as the 1-bit filters (DESIGN §3.5/§3.6)."""
+    cfg = DedupConfig.for_variant("sbf", **COUNTER_CFG)
+    d = Dedup(cfg)
+    st = d.init()
+    kb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.uint32)
+    vb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.bool_)
+    lowered = d._stream.lower(st, kb, vb).as_text()
+    m = re.search(
+        rf"%arg0: tensor<{cfg.n_planes}x1x{cfg.s_words}xui32>\s*\{{([^}}]*)\}}",
+        lowered)
+    assert m is not None and "tf.aliasing_output" in m.group(1), (
+        "counter plane state is not donated/aliased in the stream scan")
+
+
 def test_stream_donates_and_aliases_filter_state():
     """run_stream's jitted scan declares the state buffers donated (aliased
     to outputs) — the k·s-bit filter is updated in place, not copied."""

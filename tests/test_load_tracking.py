@@ -14,12 +14,16 @@ import numpy as np
 import pytest
 
 from repro.core import Dedup, DedupConfig, VARIANTS
-from repro.core.packed import popcount
+from repro.core.batched import sbf_planes_3d
+from repro.core.packed import planes_nonzero, popcount
 
 
 def _exact_load(state, variant):
     bits = np.asarray(state.bits)
     if state.is_packed:
+        if variant == "sbf":     # nonzero-cell count over the plane stack
+            return np.asarray(popcount(
+                planes_nonzero(sbf_planes_3d(state.bits))))
         return np.asarray(popcount(state.bits))
     if variant == "sbf":
         return (bits > 0).sum(axis=1)
@@ -37,11 +41,12 @@ def _streams(seed):
 
 
 def _engine_grid():
+    """Every variant x {dense8, planes} x {jnp, pallas} — SBF included since
+    the counter-plane layout (DESIGN §3.6) made it first-class."""
     for variant in VARIANTS:
         yield variant, False, "jnp"
-        if variant != "sbf":
-            yield variant, True, "jnp"
-            yield variant, True, "pallas"
+        yield variant, True, "jnp"
+        yield variant, True, "pallas"
 
 
 @pytest.mark.parametrize("variant,packed,backend", list(_engine_grid()))
@@ -60,7 +65,7 @@ def test_incremental_load_equals_popcount(variant, packed, backend):
                 f"/{backend} on {name}[:{n}]")
 
 
-@pytest.mark.parametrize("variant", [v for v in VARIANTS if v != "sbf"])
+@pytest.mark.parametrize("variant", VARIANTS)
 @pytest.mark.parametrize("packed", [False, True])
 def test_debug_exact_load_matches_incremental(variant, packed):
     """The escape hatch (full popcount per step) and the incremental tracker

@@ -15,7 +15,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.batched import intra_batch_seen
 from repro.core.hashing import hash_positions, derive_seeds, route_hash
-from repro.core.packed import pack_bits, popcount, split_pos, unpack_bits
+from repro.core.packed import (pack_bits, pack_cells, planes_saturating_add,
+                               planes_saturating_sub, popcount, split_pos,
+                               unpack_bits, unpack_cells)
 from repro.dedup.pipeline import unique_gather
 
 _SET = settings(max_examples=40, deadline=None)
@@ -81,6 +83,38 @@ def test_pack_roundtrip(bits):
     assert np.array_equal(np.asarray(unpack_bits(packed, len(bits))),
                           np.asarray(arr))
     assert int(popcount(packed)[0]) == sum(bits)
+
+
+@given(st.integers(1, 5),
+       st.lists(st.integers(0, 31), min_size=1, max_size=200))
+@_SET
+def test_plane_pack_roundtrip(d, cells):
+    """Counter-plane encode/decode is lossless for any plane count d and
+    any cell values below 2^d (DESIGN §3.6)."""
+    vals = [c % (1 << d) for c in cells]
+    arr = jnp.asarray([vals], jnp.int32)
+    planes = pack_cells(arr, d)
+    assert planes.shape == (d, 1, (len(vals) + 31) // 32)
+    assert np.array_equal(np.asarray(unpack_cells(planes, len(vals))),
+                          np.asarray(arr))
+
+
+@given(st.integers(1, 5),
+       st.lists(st.tuples(st.integers(0, 31), st.integers(0, 31)),
+                min_size=1, max_size=200))
+@_SET
+def test_plane_saturating_arithmetic(d, pairs):
+    """Borrow/carry-chain word ops == clamped integer arithmetic:
+    sub saturates at 0, add at the all-ones value 2^d - 1."""
+    hi = 1 << d
+    a = np.asarray([[x % hi for x, _ in pairs]])
+    c = np.asarray([[y % hi for _, y in pairs]])
+    pa, pc = pack_cells(jnp.asarray(a), d), pack_cells(jnp.asarray(c), d)
+    s = a.shape[1]
+    sub = np.asarray(unpack_cells(planes_saturating_sub(pa, pc), s))
+    add = np.asarray(unpack_cells(planes_saturating_add(pa, pc), s))
+    assert np.array_equal(sub, np.maximum(a - c, 0))
+    assert np.array_equal(add, np.minimum(a + c, hi - 1))
 
 
 @given(st.lists(st.integers(0, 1023), min_size=1, max_size=100))
