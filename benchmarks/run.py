@@ -21,6 +21,7 @@ MODULES = [
     "theory_convergence", # Theorem 3.1 / Lemma 1 + Eq-level checks
     "throughput",         # §1 ingest-rate requirement; engines + kernels
     "counter_throughput", # SBF counter planes vs dense8 (DESIGN §3.6)
+    "window_throughput",  # swbf sliding window vs dense8 idiom (DESIGN §3.7)
     "blocked_accuracy",   # beyond-paper: VMEM-blocked layout FPR cost
     "roofline",           # §Roofline terms from the dry-run artifacts
 ]

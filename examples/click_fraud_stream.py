@@ -21,7 +21,8 @@ from repro.serve import ServeSession
 N = 500_000
 BATCH = 4096
 
-data, truth = clickstream(N, fraud_frac=0.08, burst=25, seed=0)
+data, truth, key_collisions = clickstream(N, fraud_frac=0.08, burst=25,
+                                          seed=0)
 cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 22, batch_size=BATCH)
 pipe = DedupPipeline(cfg, mode="flag")
 
@@ -37,6 +38,8 @@ fp = (flags & ~t).sum()
 fn = (~flags & t).sum()
 print(f"clicks processed:      {len(flags):,} "
       f"({pipe.metrics.throughput:,.0f}/s)")
+print(f"32-bit key collisions: {key_collisions} "
+      f"(pairs the hashed key would have conflated — truth uses the pairs)")
 print(f"fraud recall:          {tp/(tp+fn):6.2%}")
 print(f"billing precision:     {tp/(tp+fp):6.2%}  "
       f"(false-flag rate {fp/max(1,(~t).sum()):.3%})")

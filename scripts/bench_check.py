@@ -29,6 +29,13 @@ multi-process wall-clock on a shared CPU jitters more than in-process runs.
 plus the counter-layout acceptance bar (DESIGN §3.6): at the paper-scale
 row (``mem_26``) the plane layout must hold >= 2x the dense8 SBF baseline's
 elems/s.
+
+``--window`` validates the committed BENCH_window.json (emitted by
+``python -m benchmarks.window_throughput``) the same way, plus the
+windowed-dedup acceptance bar (DESIGN §3.7): at the paper-scale row
+(``mem_26``) the swbf plane engine must hold >= 2x the dense8-idiom
+reference's elems/s, with the one-dispatch stream contract intact
+(stream_cache == 1).
 """
 
 from __future__ import annotations
@@ -92,50 +99,74 @@ def check_sharded(tol: float) -> int:
     return 1 if fail else 0
 
 
-def check_counter(tol: float) -> int:
-    """Validate the committed BENCH_counter.json: trajectory vs the frozen
-    baseline for every gated row, plus the DESIGN §3.6 acceptance bar —
-    plane-layout SBF >= 2x dense8 SBF elems/s at the paper-scale row."""
-    from benchmarks.counter_throughput import BENCH_PATH as COUNTER_PATH
-    from benchmarks.counter_throughput import GATE_MEM, MEM_SWEEP
-
-    if not os.path.exists(COUNTER_PATH):
-        print(f"bench_check: no committed artifact at {COUNTER_PATH} — run "
-              f"`python -m benchmarks.counter_throughput --fast` first")
+def _check_mem_sweep_gate(label: str, bench_path: str, mem_sweep, gate_mem,
+                          ref_eng: str, gated_eng: str, rerun_hint: str,
+                          tol: float) -> int:
+    """Shared validator for the mem-sweep artifacts (counter §3.6, window
+    §3.7): per-row elems/s trajectory vs the frozen baseline, the
+    one-dispatch stream contract where the row records it, and the >= 2x
+    paper-scale layout gate (``gated_eng`` vs ``ref_eng`` at ``gate_mem``).
+    No re-measuring."""
+    if not os.path.exists(bench_path):
+        print(f"bench_check: no committed artifact at {bench_path} — run "
+              f"`python -m benchmarks.{rerun_hint} --fast` first")
         return 2
-    with open(COUNTER_PATH) as f:
+    with open(bench_path) as f:
         doc = json.load(f)
     baseline, current = doc.get("baseline", {}), doc.get("current", {})
     fail = False
-    print(f"{'row':24s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
-    for mem in MEM_SWEEP:
+    print(f"{'row':26s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
+    for mem in mem_sweep:
         tag = f"mem_{mem.bit_length() - 1}"
-        for eng in ("sbf_dense8", "sbf_planes"):
+        for eng in (ref_eng, gated_eng):
             key = f"{tag}/{eng}"
             cur = current.get(key, {})
             if "eps" not in cur:
-                print(f"{key:24s} {'—':>12s} {'MISSING':>12s}   REGRESSION")
+                print(f"{key:26s} {'—':>12s} {'MISSING':>12s}   REGRESSION")
                 fail = True
                 continue
             ref = baseline.get(key, {}).get("eps")
             ratio = (cur["eps"] / ref) if ref else float("nan")
             status = ""
-            if ref and cur["eps"] < (1.0 - tol) * ref:
+            if "stream_cache" in cur and cur["stream_cache"] != 1:
+                status = f"  REGRESSION(stream_cache={cur['stream_cache']})"
+            elif ref and cur["eps"] < (1.0 - tol) * ref:
                 status = "  REGRESSION"
-            print(f"{key:24s} {ref or 0:12.0f} {cur['eps']:12.0f} "
+            print(f"{key:26s} {ref or 0:12.0f} {cur['eps']:12.0f} "
                   f"{ratio:6.2f}x{status}")
             fail = fail or bool(status)
-    gate_tag = f"mem_{GATE_MEM.bit_length() - 1}"
-    d8 = current.get(f"{gate_tag}/sbf_dense8", {}).get("eps")
-    pl = current.get(f"{gate_tag}/sbf_planes", {}).get("eps")
+    gate_tag = f"mem_{gate_mem.bit_length() - 1}"
+    d8 = current.get(f"{gate_tag}/{ref_eng}", {}).get("eps")
+    pl = current.get(f"{gate_tag}/{gated_eng}", {}).get("eps")
     if not d8 or not pl:
-        print(f"counter gate: {gate_tag} rows missing   REGRESSION")
+        print(f"{label} gate: {gate_tag} rows missing   REGRESSION")
         return 1
     speedup = pl / d8
     verdict = "ok" if speedup >= 2.0 else "REGRESSION(< 2x)"
-    print(f"counter gate ({gate_tag}): planes/dense8 = {speedup:.2f}x "
-          f"(>= 2x required)   {verdict}")
+    print(f"{label} gate ({gate_tag}): {gated_eng}/{ref_eng} = "
+          f"{speedup:.2f}x (>= 2x required)   {verdict}")
     return 1 if (fail or speedup < 2.0) else 0
+
+
+def check_counter(tol: float) -> int:
+    """BENCH_counter.json: trajectory + the DESIGN §3.6 acceptance bar —
+    plane-layout SBF >= 2x dense8 SBF elems/s at the paper-scale row."""
+    from benchmarks.counter_throughput import (BENCH_PATH, GATE_MEM,
+                                               MEM_SWEEP)
+    return _check_mem_sweep_gate("counter", BENCH_PATH, MEM_SWEEP, GATE_MEM,
+                                 "sbf_dense8", "sbf_planes",
+                                 "counter_throughput", tol)
+
+
+def check_window(tol: float) -> int:
+    """BENCH_window.json: trajectory + the DESIGN §3.7 acceptance bar —
+    swbf plane engine >= 2x the dense8-idiom reference's elems/s at the
+    paper-scale row, with the one-dispatch stream contract intact."""
+    from benchmarks.window_throughput import (BENCH_PATH, GATE_MEM,
+                                              MEM_SWEEP)
+    return _check_mem_sweep_gate("window", BENCH_PATH, MEM_SWEEP, GATE_MEM,
+                                 "swbf_dense8_ref", "swbf_planes",
+                                 "window_throughput", tol)
 
 
 def main(argv=None) -> int:
@@ -151,11 +182,17 @@ def main(argv=None) -> int:
     ap.add_argument("--counter", action="store_true",
                     help="validate BENCH_counter.json (SBF dense8 vs plane "
                          "layout, incl. the >= 2x paper-scale gate)")
+    ap.add_argument("--window", action="store_true",
+                    help="validate BENCH_window.json (swbf planes vs the "
+                         "dense8-idiom reference, incl. the >= 2x "
+                         "paper-scale gate)")
     args = ap.parse_args(argv)
     if args.sharded:
         return check_sharded(0.35 if args.tol is None else args.tol)
     if args.counter:
         return check_counter(0.35 if args.tol is None else args.tol)
+    if args.window:
+        return check_window(0.35 if args.tol is None else args.tol)
     if args.tol is None:
         args.tol = 0.25
 

@@ -47,6 +47,10 @@ def layout_meta(cfg: DedupConfig) -> dict:
         "filter_cells": cfg.s,
         "filter_rows": cfg.n_rows,
         "filter_max": cfg.sbf_max if cfg.variant == "sbf" else 1,
+        # swbf's ring-extended state (DESIGN §3.7): a restoring engine must
+        # rebuild the same (window, d, W) ring slots and event capacity
+        "filter_window": cfg.window if cfg.variant == "swbf" else 0,
+        "filter_cbf_bits": cfg.cbf_bits if cfg.variant == "swbf" else 0,
     }
 
 
@@ -54,7 +58,7 @@ def _cells_from_state(state: FilterState, cfg: DedupConfig) -> jnp.ndarray:
     """Decode any layout to (n_rows, s) integer cell values."""
     if not state.is_packed:                          # dense8: already cells
         return state.bits.astype(jnp.int32)
-    if cfg.variant == "sbf":
+    if cfg.variant in ("sbf", "swbf"):
         planes = state.bits if state.bits.ndim == 3 else state.bits[None]
         return unpack_cells(planes, cfg.s)
     return unpack_bits(state.bits, cfg.s).astype(jnp.int32)
@@ -73,7 +77,10 @@ def migrate_filter_state(state: FilterState, src_cfg: DedupConfig,
     for field, a, b in (("variant", src_cfg.variant, dst_cfg.variant),
                         ("s", src_cfg.s, dst_cfg.s),
                         ("n_rows", src_cfg.n_rows, dst_cfg.n_rows),
-                        ("sbf_max", src_cfg.sbf_max, dst_cfg.sbf_max)):
+                        ("sbf_max", src_cfg.sbf_max, dst_cfg.sbf_max),
+                        ("window", src_cfg.window, dst_cfg.window),
+                        ("bits_per_cell", src_cfg.bits_per_cell,
+                         dst_cfg.bits_per_cell)):
         if a != b:
             raise ValueError(
                 f"cannot migrate between different filters: {field} "
@@ -84,10 +91,14 @@ def migrate_filter_state(state: FilterState, src_cfg: DedupConfig,
         cells = _cells_from_state(state, src_cfg)        # (n_rows, s)
         if dst_cfg.effective_layout == "dense8":
             bits = cells.astype(jnp.uint8)
-        elif dst_cfg.variant == "sbf":
+        elif dst_cfg.variant in ("sbf", "swbf"):
             planes = pack_cells(cells, dst_cfg.n_planes)  # (d, n_rows, W)
             bits = planes[0] if dst_cfg.n_planes == 1 else planes
         else:
             bits = pack_bits(cells.astype(jnp.uint8))     # (k, W)
+    # the swbf window ring (DESIGN §3.7) is layout-independent word data —
+    # it carries over with fresh buffers like position/load/rng
+    ring = jax.tree.map(_fresh, state.ring)
     return FilterState(bits=bits, position=_fresh(state.position),
-                       load=_fresh(state.load), rng=_fresh(state.rng))
+                       load=_fresh(state.load), rng=_fresh(state.rng),
+                       ring=ring)

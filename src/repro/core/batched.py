@@ -37,11 +37,12 @@ import jax.numpy as jnp
 
 from .config import DedupConfig
 from .hashing import derive_seeds, hash_positions
-from .packed import (count_field_chunks, counts_to_planes,
+from .packed import (clamped_run_counts, count_planes_from_sorted,
                      delta_from_sorted_positions, planes_nonzero,
-                     planes_saturating_sub, planes_set_value, popcount,
-                     probe_packed, probe_sorted_packed, run_heads, split_pos)
-from .state import FilterState
+                     planes_saturating_add, planes_saturating_sub,
+                     planes_set_value, popcount, probe_packed,
+                     probe_sorted_packed, run_heads, run_heads_1d, split_pos)
+from .state import FilterState, WindowRing
 
 
 class BatchResult(NamedTuple):
@@ -210,11 +211,6 @@ def draw_sbf_randomness(cfg: DedupConfig, rng: jax.Array, b: int):
     return rng, start
 
 
-def _run_heads_1d(sp: jnp.ndarray) -> jnp.ndarray:
-    """(n,) sorted -> True at the first event of each equal-value run."""
-    return jnp.concatenate([jnp.ones((1,), bool), sp[1:] != sp[:-1]])
-
-
 def sbf_event_deltas(cfg: DedupConfig, pos: jnp.ndarray, start: jnp.ndarray,
                      valid: jnp.ndarray) -> SbfBatchDeltas:
     """Batch events -> word deltas through the sorted-position machinery.
@@ -238,24 +234,11 @@ def sbf_event_deltas(cfg: DedupConfig, pos: jnp.ndarray, start: jnp.ndarray,
     sentinel = 32 * W
     run = (start[:, None] + jnp.arange(p_run, dtype=jnp.int32)) % s  # (B, P)
     spd = jnp.sort(jnp.where(valid[:, None], run, sentinel).reshape(-1))
-    # clamped multiplicity: 1 + #{r < Max : spd[i] == spd[i+r]} — exact for
-    # the head of every run once clamped to Max
-    ext = jnp.concatenate([spd, jnp.full((max(cmax - 1, 1),), -1, spd.dtype)])
-    n = spd.shape[0]
-    cnt = jnp.ones((n,), jnp.uint32)
-    for r in range(1, cmax):
-        cnt = cnt + (spd == ext[r:r + n]).astype(jnp.uint32)
-    dec_head = _run_heads_1d(spd)
-    cpc = 32 // d
-    nc = count_field_chunks(d)
-    t = (spd & 31).astype(jnp.uint32)
-    fidx = (spd >> 5) * nc + (t // cpc).astype(jnp.int32)  # sentinel -> >= W·nc
-    fval = jnp.where(dec_head, cnt, jnp.uint32(0)) << (d * (t % cpc))
-    acc = jnp.zeros((W * nc,), jnp.uint32).at[fidx].add(fval, mode="drop")
-    count_planes = counts_to_planes(acc, d, W)                     # (d, W)
+    dec_head, cnt = clamped_run_counts(spd, cmax)
+    count_planes = count_planes_from_sorted(spd, dec_head, cnt, d, W)  # (d, W)
     # set-to-Max OR delta: head-only masks are disjoint bits per word
     sps = jnp.sort(jnp.where(valid[:, None], pos, sentinel).reshape(-1))
-    set_head = _run_heads_1d(sps)
+    set_head = run_heads_1d(sps)
     smask = jnp.where(set_head,
                       jnp.uint32(1) << (sps & 31).astype(jnp.uint32),
                       jnp.uint32(0))
@@ -331,6 +314,140 @@ def make_sbf_planes_step(cfg: DedupConfig) -> BatchedStep:
     return step
 
 
+class SwbfBatchDeltas(NamedTuple):
+    """One SWBF batch's insert events, reduced to word deltas (DESIGN.md
+    §3.7). Shared by the jnp plane step and the fused Pallas kernel — both
+    backends apply (and ring-store) the SAME deltas, so they are
+    bit-identical by construction."""
+    count_planes: jnp.ndarray   # (d, W) uint32 — per-cell event
+                                #   multiplicities clamped to 2^d - 1,
+                                #   as bit-planes (the ring payload)
+    ins_sorted: jnp.ndarray     # (E,) int32 — sorted insert cells, sentinel
+                                #   32·W padded to the ring's event width
+    ins_head: jnp.ndarray       # (E,) bool — first event of each cell
+
+
+def swbf_event_deltas(cfg: DedupConfig, pos: jnp.ndarray, valid: jnp.ndarray,
+                      width: int) -> SwbfBatchDeltas:
+    """A batch's B·k insert positions -> clamped count planes + the sorted
+    event list, through the same one-sort machinery as the SBF deltas: a
+    cell's increment is its event multiplicity clamped to the counter cap
+    2^d - 1 (clamping is consistent — the ring stores and later subtracts
+    the SAME clamped planes, and the host oracle replicates it). ``width``
+    pads the sorted list with sentinels up to the ring's event capacity so
+    ragged batches (and the sharded dispatch width) share one slot shape."""
+    W, d = cfg.s_words, cfg.n_planes
+    cmax = (1 << d) - 1
+    sentinel = 32 * W
+    flat = jnp.where(valid[:, None], pos, sentinel).reshape(-1)
+    if width < flat.shape[0]:
+        raise ValueError(
+            f"swbf step saw {flat.shape[0]} events but the state ring holds "
+            f"{width} — init the state with event_capacity >= the step's "
+            f"element count (DESIGN §3.7)")
+    if width > flat.shape[0]:
+        flat = jnp.concatenate(
+            [flat, jnp.full((width - flat.shape[0],), sentinel, flat.dtype)])
+    sp = jnp.sort(flat)
+    head, cnt = clamped_run_counts(sp, cmax)
+    count_planes = count_planes_from_sorted(sp, head, cnt, d, W)   # (d, W)
+    return SwbfBatchDeltas(count_planes, sp, head)
+
+
+def ring_expire_planes(cfg: DedupConfig, ring: WindowRing):
+    """Re-expand the expiring slot's sorted event list into its (d, W)
+    packed count planes — the subtrahend for ``planes_saturating_sub``.
+
+    Deterministic re-expansion of the SAME list the arrival batch built its
+    increment planes from, so expiry removes exactly what arrival added
+    (modulo the cells' saturation, which the host oracle replicates). One
+    event-sized scatter; the stored list is already sorted, so no sort.
+    Returns (events, heads, count_planes) — the events/heads feed the §3.1
+    load accounting."""
+    ev = jax.lax.dynamic_index_in_dim(ring.events, ring.slot, 0,
+                                      keepdims=False)             # (E,)
+    head, cnt = clamped_run_counts(ev, (1 << cfg.n_planes) - 1)
+    planes = count_planes_from_sorted(ev, head, cnt, cfg.n_planes,
+                                      cfg.s_words)                # (d, W)
+    return ev, head, planes
+
+
+def ring_push(ring: WindowRing, ev: SwbfBatchDeltas, window: int
+              ) -> WindowRing:
+    """Overwrite the expired slot with the arriving batch's event list and
+    advance. Identical jnp code on both backends — the ring is engine
+    state, not kernel state (the kernel only consumes the expiring slot's
+    re-expanded planes)."""
+    events = jax.lax.dynamic_update_index_in_dim(
+        ring.events, ev.ins_sorted, ring.slot, 0)
+    return WindowRing(events, (ring.slot + 1) % window)
+
+
+def make_swbf_planes_step(cfg: DedupConfig) -> BatchedStep:
+    """Sliding-window counting-Bloom dedup on the plane layout (DESIGN.md
+    §3.7): probe the batch-entry snapshot (duplicate iff all k probed cells
+    nonzero, i.e. the key appeared within the last ``window`` batches, OR an
+    equal key occurred earlier in this batch), borrow-chain-decrement the
+    expiring slot's count planes, carry-chain-increment the arriving
+    batch's, and track the exact nonzero-cell load from batch-sized event
+    gathers (§3.1 discipline — no O(s) reduce). Deterministic: no random
+    deletions, the rng threads through untouched."""
+    cfg = cfg.validate()
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    s, W, window = cfg.s, cfg.s_words, cfg.window
+    squeeze = cfg.n_planes == 1
+
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+        ring = state.ring
+        planes = sbf_planes_3d(state.bits)[:, 0, :]               # (d, W)
+        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)   # (B, k)
+        nzw = planes_nonzero(planes)                              # (W,)
+        w_idx, mask = split_pos(pos)
+        vals = (nzw[w_idx] & mask) != 0                           # (B, k)
+        seen = intra_batch_seen(keys, valid)
+        dup = (jnp.all(vals, axis=1) | seen) & valid
+        ev = swbf_event_deltas(cfg, pos, valid, ring.events.shape[-1])
+        exp_events, exp_head, expire_counts = ring_expire_planes(cfg, ring)
+        new = planes_saturating_add(
+            planes_saturating_sub(planes, expire_counts), ev.count_planes)
+        if cfg.debug_exact_load:
+            load = popcount(planes_nonzero(new)[None])
+        else:
+            # exact incremental nonzero-cell load (§3.1/§3.7):
+            #   gained — insert cells whose PRE value was zero (their head
+            #            increment is >= 1, so they end nonzero);
+            #   lost   — expired cells that were nonzero and whose POST
+            #            nonzero bit is clear (decayed to zero and not
+            #            re-inserted — increments apply after decrements,
+            #            so the post bit IS the "was it refreshed" flag).
+            # The two sets are disjoint (pre-zero vs pre-nonzero); each cell
+            # counts once (run heads); batch-sized gathers only.
+            new_nz = planes_nonzero(new)
+            sentinel = 32 * W
+
+            def nz_bit(words, sp):
+                got = words[jnp.minimum(sp >> 5, W - 1)]
+                return (got >> (sp & 31).astype(jnp.uint32)) & jnp.uint32(1)
+
+            gained = jnp.sum(ev.ins_head & (ev.ins_sorted < sentinel)
+                             & (nz_bit(nzw, ev.ins_sorted) == 0),
+                             dtype=jnp.int32)
+            lost = jnp.sum(exp_head & (exp_events < sentinel)
+                           & (nz_bit(nzw, exp_events) == 1)
+                           & (nz_bit(new_nz, exp_events) == 0),
+                           dtype=jnp.int32)
+            load = state.load + gained - lost
+        bits = new[:, None, :] if not squeeze else new
+        n_valid = valid.sum(dtype=jnp.int32)
+        new_state = FilterState(bits, state.position + n_valid, load,
+                                state.rng, ring_push(ring, ev, window))
+        return new_state, BatchResult(dup=dup, inserted=valid)
+
+    return step
+
+
 def make_batched_step(cfg: DedupConfig) -> BatchedStep:
     cfg = cfg.validate()
     seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
@@ -338,6 +455,13 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
               if cfg.block_bits else None)
     s, k = cfg.s, cfg.k
     rows = jnp.arange(k, dtype=jnp.int32)
+
+    # ---------------- SWBF (sliding-window counters, §3.7) --------------- //
+    if cfg.variant == "swbf":
+        if cfg.backend == "pallas":
+            from ..kernels.fused_counter_step import make_fused_swbf_step
+            return make_fused_swbf_step(cfg)
+        return make_swbf_planes_step(cfg)
 
     # ---------------- SBF (counter cells) -------------------------------- //
     if cfg.variant == "sbf":

@@ -19,6 +19,14 @@ import math
 from typing import Optional
 
 VARIANTS = ("sbf", "rsbf", "bsbf", "bsbfsd", "rlbsbf")
+# Beyond-paper structures that ride the same engines. "swbf" is the
+# sliding-window counting Bloom filter (DESIGN.md §3.7): one shared array of
+# d-bit saturating counters probed by k hashes, incremented on arrival and
+# decremented when the batch that inserted them expires from the window — an
+# element is reported duplicate iff it appeared within the last
+# ``window`` batches.
+WINDOWED_VARIANTS = ("swbf",)
+ALL_VARIANTS = VARIANTS + WINDOWED_VARIANTS
 
 
 def k_from_fpr_t(fpr_t: float) -> int:
@@ -68,6 +76,14 @@ class DedupConfig:
     # --- SBF baseline (Deng & Rafiei) ---
     sbf_max: int = 3                     # counter cap  => 2 bits/cell
     sbf_p: Optional[int] = None          # eviction count; None => optimal
+    # --- SWBF sliding window (DESIGN.md §3.7) ---
+    window: int = 0                      # swbf: window size in BATCHES; an
+                                         # element is duplicate iff it
+                                         # occurred within the last ``window``
+                                         # batches (or earlier in its own)
+    cbf_bits: int = 4                    # swbf: counter width d (bit-planes);
+                                         # per-batch multiplicities and cells
+                                         # saturate at 2^d - 1
     # --- engine knobs ---
     batch_size: int = 8192               # batched-engine width
     layout: str = "auto"                 # "auto" | "dense8" | "planes" — cell
@@ -98,13 +114,18 @@ class DedupConfig:
     def bits_per_cell(self) -> int:
         if self.variant == "sbf":
             return max(1, (self.sbf_max).bit_length())
+        if self.variant == "swbf":
+            return self.cbf_bits
         return 1
 
     @property
     def effective_layout(self) -> str:
         """Resolved cell layout: ``layout`` wins; "auto" maps ``packed`` to
-        the plane layout and everything else to dense8."""
+        the plane layout and everything else to dense8 — except swbf, which
+        only exists on the plane machinery (§3.7) and resolves to planes."""
         if self.layout == "auto":
+            if self.variant == "swbf":
+                return "planes"
             return "planes" if self.packed else "dense8"
         return self.layout
 
@@ -121,18 +142,20 @@ class DedupConfig:
 
     @property
     def s(self) -> int:
-        """Bits per filter (paper: s = M/k), or cells for SBF's single array
-        (cells = M / bits_per_cell) — per shard, for memory parity."""
+        """Bits per filter (paper: s = M/k), or cells for the counter
+        structures' single array (cells = M / bits_per_cell) — per shard,
+        for memory parity."""
         per_shard = self.memory_bits // max(1, self.shards)
-        if self.variant == "sbf":
+        if self.variant in ("sbf", "swbf"):
             return max(8, per_shard // self.bits_per_cell)
         return max(8, per_shard // self.k)
 
     @property
     def n_rows(self) -> int:
-        """Rows of the bits array: SBF keeps one shared cell array probed by
-        k hashes (Deng & Rafiei layout); the paper's variants keep k filters."""
-        return 1 if self.variant == "sbf" else self.k
+        """Rows of the bits array: the counter structures (SBF, SWBF) keep
+        one shared cell array probed by k hashes (Deng & Rafiei layout); the
+        paper's variants keep k filters."""
+        return 1 if self.variant in ("sbf", "swbf") else self.k
 
     @property
     def s_words(self) -> int:
@@ -152,10 +175,19 @@ class DedupConfig:
         return int(math.ceil(self.s / self.p_star))
 
     def validate(self) -> "DedupConfig":
-        if self.variant not in VARIANTS:
-            raise ValueError(f"unknown variant {self.variant!r}; one of {VARIANTS}")
+        if self.variant not in ALL_VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; one of {ALL_VARIANTS}")
         if self.k < 1:
             raise ValueError("k must be >= 1")
+        if self.variant == "swbf":
+            if self.window < 1:
+                raise ValueError("swbf needs window >= 1 (batches)")
+            if not (1 <= self.cbf_bits <= 8):
+                raise ValueError("swbf counter width cbf_bits in [1, 8]")
+            if self.effective_layout != "planes":
+                raise ValueError("swbf only exists on the plane layout "
+                                 "(layout='planes' or 'auto'; DESIGN §3.7)")
         if self.s < 8:
             raise ValueError("filter too small: raise memory_bits or lower k/shards")
         if not (0.0 < self.p_star < 1.0):
@@ -182,6 +214,9 @@ class DedupConfig:
             k = rsbf_k(fpr_t)
         elif variant == "sbf":
             k = kw.pop("k", 3)
+        elif variant == "swbf":
+            k = kw.pop("k", 3)
+            kw.setdefault("window", 8)   # windowed dedup needs a window
         else:
             k = kw.pop("k", 2)  # paper settles on k=2 for BSBF/BSBFSD/RLBSBF
         return DedupConfig(variant=variant, memory_bits=memory_bits, k=k,

@@ -46,13 +46,27 @@ class Dedup:
         self._stream = jax.jit(self._stream_impl, donate_argnums=0)
 
     # ------------------------------------------------------------------ //
-    def init(self, seed: int | None = None) -> FilterState:
-        return init_state(self.cfg, seed)
+    def init(self, seed: int | None = None,
+             event_capacity: int | None = None) -> FilterState:
+        """``event_capacity`` (swbf only) widens the state ring's per-slot
+        event list beyond the default ``cfg.batch_size`` elements — needed
+        when ``process`` will be driven with wider batches (DESIGN §3.7)."""
+        return init_state(self.cfg, seed, event_capacity=event_capacity)
 
     def process(self, state: FilterState, keys: jnp.ndarray,
                 valid: jnp.ndarray | None = None
                 ) -> Tuple[FilterState, BatchResult]:
-        """One batched step. keys (B,) uint32."""
+        """One batched step. keys (B,) uint32. For the windowed variant
+        (swbf) the batch must fit the state ring's event capacity — one ring
+        slot absorbs one step's events (DESIGN §3.7)."""
+        if state.ring is not None:
+            cap = state.ring.events.shape[-1] // self.cfg.k
+            if keys.shape[0] > cap:
+                raise ValueError(
+                    f"swbf batch of {keys.shape[0]} exceeds the state ring's "
+                    f"event capacity {cap} — init the state with "
+                    f"event_capacity >= the batch width, or batch at "
+                    f"cfg.batch_size={self.cfg.batch_size}")
         if valid is None:
             valid = jnp.ones(keys.shape, dtype=bool)
         return self._batched(state, keys.astype(jnp.uint32), valid)

@@ -32,6 +32,7 @@ __all__ = [
     "scatter_or", "scatter_andnot", "popcount", "popcount_words",
     "pack_cells", "unpack_cells", "planes_nonzero",
     "count_field_chunks", "counts_to_planes",
+    "run_heads_1d", "clamped_run_counts", "count_planes_from_sorted",
     "planes_saturating_sub", "planes_saturating_add", "planes_set_value",
 ]
 
@@ -258,6 +259,75 @@ def counts_to_planes(acc: jnp.ndarray, d: int, w: int) -> jnp.ndarray:
             p = p | (((a[:, c] >> (d * tl + q)) & jnp.uint32(1)) << t)
         planes.append(p)
     return jnp.stack(planes)
+
+
+def run_heads_1d(sp: jnp.ndarray) -> jnp.ndarray:
+    """(n,) sorted -> True at the first event of each equal-value run."""
+    return jnp.concatenate([jnp.ones((1,), bool), sp[1:] != sp[:-1]])
+
+
+def clamped_run_counts(sp: jnp.ndarray, cmax: int):
+    """(n,) *sorted* event cells -> (head, cnt): run-head flags and each
+    event's run length clamped to ``cmax`` (exact at every head once
+    clamped — the only places the count is consumed). Shared by SBF's
+    decrement runs and SWBF's insert events (DESIGN.md §3.6/§3.7).
+
+    Small caps read the count off with cmax-1 shifted equality compares;
+    wide caps (> 16, e.g. cbf_bits=8's 255) would unroll into hundreds of
+    full-width vector passes, so they take two binary searches of the
+    sorted array against itself instead (exact run lengths, O(n log n)).
+    Identical outputs either way."""
+    n = sp.shape[0]
+    if cmax <= 1:
+        return run_heads_1d(sp), jnp.ones((n,), jnp.uint32)
+    if cmax - 1 > 16:
+        lo = jnp.searchsorted(sp, sp, side="left")
+        hi = jnp.searchsorted(sp, sp, side="right")
+        cnt = jnp.minimum((hi - lo).astype(jnp.uint32), jnp.uint32(cmax))
+        return run_heads_1d(sp), cnt
+    cnt = jnp.ones((n,), jnp.uint32)
+    ext = jnp.concatenate([sp, jnp.full((cmax - 1,), -1, sp.dtype)])
+    for r in range(1, cmax):
+        cnt = cnt + (sp == ext[r:r + n]).astype(jnp.uint32)
+    return run_heads_1d(sp), cnt
+
+
+def count_planes_from_sorted(sp: jnp.ndarray, head: jnp.ndarray,
+                             cnt: jnp.ndarray, d: int, w: int) -> jnp.ndarray:
+    """Sorted event cells + clamped head counts -> (d, W) count bit-planes.
+
+    Heads are unique per cell, so every strategy below is one collision-free
+    scatter-ADD per event — no read-modify-write, no segmented scan; the
+    choice is only about post-scatter work:
+
+      * d <= 2: scatter each count once as a d-bit field in the chunked
+        accumulator layout and unscramble with ``counts_to_planes`` (whose
+        d == 2 bit-compaction fast path is a handful of W-passes);
+      * d > 2: scatter each count's d plane bits as one (E, d) row in a
+        SINGLE scatter into a (W, d) accumulator (a multi-feature scatter
+        costs the same as a 1-D one), then transpose — O(E) scatter entries
+        + one O(d·W) transpose pass, ZERO filter-sized unscramble work.
+        The generic ``counts_to_planes`` loop is O(32·d·W) element ops,
+        which at paper-scale W dwarfs the event buffers and erases the
+        layout's win (measured in benchmarks/window_throughput.py).
+
+    Both forms produce bit-identical planes (they encode the same exact
+    counts). Sentinel cells (>= 32·W) land past the buffers, dropped."""
+    if d <= 2:
+        cpc = 32 // d
+        nc = count_field_chunks(d)
+        t = (sp & 31).astype(jnp.uint32)
+        fidx = (sp >> 5) * nc + (t // cpc).astype(jnp.int32)  # sent -> >= W·nc
+        fval = jnp.where(head, cnt, jnp.uint32(0)) << (d * (t % cpc))
+        acc = jnp.zeros((w * nc,), jnp.uint32).at[fidx].add(fval, mode="drop")
+        return counts_to_planes(acc, d, w)
+    t = (sp & 31).astype(jnp.uint32)
+    widx = sp >> 5                                         # sentinel -> >= W
+    masked = jnp.where(head, cnt, jnp.uint32(0))
+    vals = jnp.stack([((masked >> q) & jnp.uint32(1)) << t
+                      for q in range(d)], axis=1)          # (E, d)
+    acc = jnp.zeros((w, d), jnp.uint32).at[widx].add(vals, mode="drop")
+    return acc.T
 
 
 def planes_saturating_sub(planes: jnp.ndarray, counts: jnp.ndarray

@@ -5,20 +5,27 @@
     counter value). Simple scatters; the reference layout.
   * "planes": d bit-planes of (k, W) uint32 words, 32 cells per lane word.
     For the 1-bit variants d == 1 and the plane axis is squeezed — (k, W),
-    bit-for-bit the historical packed layout. For SBF d == bits_per_cell and
-    the state is the full (d, 1, W) stack: cell j's counter is
-    sum_p plane[p] bit j << p. Probed via multi-plane gather + mask, updated
-    via carry/borrow chains of word ops (see packed.py) or the Pallas
-    kernels.
+    bit-for-bit the historical packed layout. For the counter structures
+    (SBF, SWBF) d == bits_per_cell and the state is the full (d, 1, W)
+    stack: cell j's counter is sum_p plane[p] bit j << p. Probed via
+    multi-plane gather + mask, updated via carry/borrow chains of word ops
+    (see packed.py) or the Pallas kernels.
 
 ``position`` is the 1-indexed stream position ``i`` of the *next* element —
 RSBF's insert probability is s/i, so it must survive checkpoint/restart
 (see checkpoint/manager.py).
+
+``ring`` is the sliding-window machinery (swbf only, DESIGN.md §3.7): the
+last ``window`` batches' insert events (sorted cell lists — the compressed
+form of their packed event planes, re-expanded at expiry) and the slot the
+next batch will expire/overwrite. ``None`` for every other variant — as a
+pytree None is an empty subtree, so the 4-leaf historical state shape (and
+every checkpoint written by it) is unchanged.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,11 +33,32 @@ import jax.numpy as jnp
 from .config import DedupConfig
 
 
+class WindowRing(NamedTuple):
+    """Device-side ring of the last ``window`` batches' insert events.
+
+    ``events``: (window, E) int32 — each slot holds one batch's insert
+    events as a *sorted* cell list (sentinel 32·W padding): the COMPRESSED
+    form of that batch's packed event planes. At expiry the slot is
+    re-expanded to (d, W) count planes (``ring_expire_planes`` — one
+    event-sized scatter, the list is already sorted) and saturating-
+    subtracted; the same list drives the §3.1 exact-incremental-load
+    accounting (batch-sized gathers, no O(s) reduce). Storing the event
+    lists instead of the expanded (window, d, W) plane stack keeps the
+    scan-carried ring O(window·B·k) — XLA copies a scan carry that is
+    sliced AND updated in the same body, so a plane-stack ring would move
+    O(window·s) words per batch (measured: it erases the layout's win).
+    ``slot``: () int32 — the next slot to expire and overwrite.
+    """
+    events: jnp.ndarray
+    slot: jnp.ndarray
+
+
 class FilterState(NamedTuple):
     bits: jnp.ndarray       # (k, s) uint8 | (k, W) uint32 | (d, k, W) uint32
     position: jnp.ndarray   # () int32 — 1-indexed next stream position
     load: jnp.ndarray       # (k,) int32 — set bits (nonzero cells for SBF)
     rng: jax.Array          # PRNG key for the randomized deletions
+    ring: Optional[WindowRing] = None   # swbf sliding-window ring (§3.7)
 
     @property
     def is_packed(self) -> bool:
@@ -42,7 +70,22 @@ class FilterState(NamedTuple):
         return self.bits.shape[0] if self.bits.ndim == 3 else 1
 
 
-def init_state(cfg: DedupConfig, seed: int | None = None) -> FilterState:
+def init_ring(cfg: DedupConfig, event_capacity: int | None = None
+              ) -> WindowRing:
+    """Empty sliding-window ring. ``event_capacity`` is the widest per-step
+    element count the ring must absorb (defaults to ``cfg.batch_size``; the
+    sharded service passes its post-routing dispatch width). A zero slot
+    decrements nothing, so the warm-up batches need no special casing."""
+    cap = cfg.batch_size if event_capacity is None else event_capacity
+    return WindowRing(
+        events=jnp.full((cfg.window, cap * cfg.k), 32 * cfg.s_words,
+                        dtype=jnp.int32),
+        slot=jnp.asarray(0, dtype=jnp.int32),
+    )
+
+
+def init_state(cfg: DedupConfig, seed: int | None = None,
+               event_capacity: int | None = None) -> FilterState:
     cfg.validate()
     seed = cfg.seed if seed is None else seed
     if cfg.is_planes:
@@ -55,13 +98,17 @@ def init_state(cfg: DedupConfig, seed: int | None = None) -> FilterState:
             bits = jnp.zeros((cfg.n_rows, cfg.s_words), dtype=jnp.uint32)
     else:
         bits = jnp.zeros((cfg.n_rows, cfg.s), dtype=jnp.uint8)
+    ring = (init_ring(cfg, event_capacity)
+            if cfg.variant == "swbf" else None)
     return FilterState(
         bits=bits,
         position=jnp.asarray(1, dtype=jnp.int32),
         load=jnp.zeros((cfg.n_rows,), dtype=jnp.int32),
         rng=jax.random.PRNGKey(seed),
+        ring=ring,
     )
 
 
 def state_memory_bytes(state: FilterState) -> int:
-    return sum(int(x.size) * x.dtype.itemsize for x in state)
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(state))

@@ -47,9 +47,17 @@ class TheoryCurves(NamedTuple):
     load: np.ndarray | None  # expected per-filter load (RLBSBF only)
 
 
-def y_series(m: jnp.ndarray, universe: float) -> jnp.ndarray:
-    """Eq. 3.7 — computed in log space to survive m ~ 1e9."""
-    return jnp.exp(m.astype(jnp.float32) * math.log1p(-1.0 / universe))
+def y_series(m, universe: float) -> np.ndarray:
+    """Eq. 3.7: Y_m = ((U-1)/U)^(m-1) — the probability that the element at
+    1-indexed stream position m is distinct (the first element always is:
+    Y_1 = 1). Computed in log space to survive m ~ 1e9.
+
+    This is the ONE Y convention in the module — ``x_series`` consumes it
+    directly, so the historical off-by-one between the two (x_series used
+    the m-1 exponent while y_series used m, i.e. it returned Y_{m+1})
+    cannot re-diverge."""
+    m = np.asarray(m, dtype=np.float64)
+    return np.exp((m - 1.0) * math.log1p(-1.0 / universe))
 
 
 def _xk_update(x, k, leak, inject):
@@ -67,6 +75,10 @@ def x_series(cfg: DedupConfig, n: int, universe: float | None = None
     variant = cfg.variant
     if variant == "sbf":
         raise ValueError("SBF stability is closed-form; use sbf_stable_fpr")
+    if variant == "swbf":
+        raise ValueError("the windowed counting filter has no X_m "
+                         "recurrence — its steady state is the window "
+                         "occupancy (DESIGN §3.7)")
 
     def body(carry, m):
         x, load = carry
@@ -104,7 +116,7 @@ def x_series(cfg: DedupConfig, n: int, universe: float | None = None
     m_np = np.arange(1, n + 1, dtype=np.float64)
     if universe is None:
         universe = float(cfg.s) * cfg.k  # a finite-universe default
-    y = np.exp((m_np - 1) * math.log1p(-1.0 / universe))
+    y = y_series(m_np, universe)         # shared Eq. 3.7 helper — one Y
     fpr = y * xs
     fnr = (1 - y) * (1 - xs)
     return TheoryCurves(

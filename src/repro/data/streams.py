@@ -71,12 +71,41 @@ def zipf_stream(n: int, universe: int, a: float = 1.3, seed: int = 0
     return keys, truth
 
 
+def pair_truth(users: np.ndarray, items: np.ndarray) -> np.ndarray:
+    """Exact per-click ground truth from the (user, item) pairs THEMSELVES:
+    True where the same pair occurred earlier. The 32-bit probe ``key`` is a
+    lossy hash — deriving truth from it silently records a key collision
+    between two distinct clicks as a true duplicate, corrupting FPR/FNR."""
+    pairs = ((users.astype(np.uint64) << np.uint64(32))
+             | items.astype(np.uint64))
+    _, first = np.unique(pairs, return_index=True)
+    truth = np.ones(pairs.size, bool)
+    truth[first] = False
+    return truth
+
+
+def key_collision_count(users: np.ndarray, items: np.ndarray,
+                        key: np.ndarray) -> int:
+    """Number of extra distinct (user, item) pairs whose 32-bit key collides
+    with another pair's — the ground-truth error the hashed key would have
+    introduced (0 means key-derived truth happens to be exact)."""
+    pairs = ((users.astype(np.uint64) << np.uint64(32))
+             | items.astype(np.uint64))
+    return int(np.unique(pairs).size - np.unique(key).size)
+
+
 def clickstream(n: int, n_users: int = 10_000, n_items: int = 50_000,
                 fraud_frac: float = 0.05, burst: int = 20, seed: int = 0):
     """Click records (user, item) with fraudulent duplicate bursts.
 
-    -> dict of arrays {user, item, key} + truth_dup. A fraud burst repeats
-    one (user, item) click ``burst`` times — the paper's §1 detection target.
+    -> (dict of arrays {user, item, key}, truth_dup, key_collisions). A
+    fraud burst repeats one (user, item) click ``burst`` times — the
+    paper's §1 detection target. ``truth_dup`` is derived from the
+    (user, item) pairs (``pair_truth``) — NOT from the 32-bit probe key,
+    whose collisions would corrupt the ground truth; ``key_collisions``
+    reports how many distinct pairs the hashed key would have conflated
+    (kept OUT of the record dict, whose values are per-record columns that
+    consumers slice row-wise).
     """
     rng = np.random.default_rng(seed)
     n_bursts = max(1, int(n * fraud_frac / burst))
@@ -93,10 +122,9 @@ def clickstream(n: int, n_users: int = 10_000, n_items: int = 50_000,
     users, items = users[perm], items[perm]
     key = ((users.astype(np.uint64) << 17) ^ items.astype(np.uint64))
     key = ((key * 0x9E3779B97F4A7C15) >> 32).astype(np.uint32)
-    _, first = np.unique(key, return_index=True)
-    truth = np.ones(users.size, bool)
-    truth[first] = False
-    return {"user": users, "item": items, "key": key}, truth
+    truth = pair_truth(users, items)
+    return ({"user": users, "item": items, "key": key}, truth,
+            key_collision_count(users, items, key))
 
 
 def batched(keys: np.ndarray, batch: int) -> Iterator[np.ndarray]:

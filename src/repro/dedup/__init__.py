@@ -2,9 +2,11 @@
 
 from .sharded import ShardedDedup, ShardedDedupConfig
 from .pipeline import DedupPipeline, DedupBatch, unique_gather
-from .metrics import StreamMetrics, truth_from_stream
+from .metrics import (StreamMetrics, truth_from_stream,
+                      windowed_truth_from_stream)
 
 __all__ = [
     "ShardedDedup", "ShardedDedupConfig", "DedupPipeline", "DedupBatch",
     "unique_gather", "StreamMetrics", "truth_from_stream",
+    "windowed_truth_from_stream",
 ]

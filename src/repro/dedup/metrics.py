@@ -32,7 +32,10 @@ class StreamMetrics:
     false_pos: int = 0
     false_neg: int = 0
     _overflow: int = 0
-    _t0: float = dataclasses.field(default_factory=time.perf_counter)
+    # stamped at the FIRST update, not at construction: a metrics object is
+    # typically built before the engine warms up, and charging jit/compile
+    # time to the ingest clock understates throughput arbitrarily
+    _t0: Optional[float] = None
     load_history: list = dataclasses.field(default_factory=list)
     # per-batch device sums, folded into the (arbitrary-precision) python int
     # counters at read-out — a long-lived device scalar accumulator would
@@ -44,6 +47,8 @@ class StreamMetrics:
     def update(self, reported_dup: np.ndarray, truth_dup: Optional[np.ndarray],
                load: Optional[np.ndarray] = None, s_bits: Optional[int] = None,
                overflow=0) -> None:
+        if self._t0 is None:                      # first batch starts the clock
+            self._t0 = time.perf_counter()
         if not hasattr(reported_dup, "sum"):      # plain sequences accepted
             reported_dup = np.asarray(reported_dup)
         self.n += int(np.prod(reported_dup.shape))   # static shape — no sync
@@ -109,6 +114,8 @@ class StreamMetrics:
 
     @property
     def throughput(self) -> float:
+        if self._t0 is None:
+            return 0.0
         return self.n / max(1e-9, time.perf_counter() - self._t0)
 
     def _loads(self) -> list:
@@ -158,3 +165,23 @@ def truth_from_stream(keys: np.ndarray) -> np.ndarray:
     truth = np.ones(keys.shape[0], dtype=bool)
     truth[first_idx] = False
     return truth
+
+
+def windowed_truth_from_stream(keys: np.ndarray, window: int,
+                               batch_size: int) -> np.ndarray:
+    """Batch-windowed ground truth matching the swbf semantics (DESIGN
+    §3.7): True where the key occurred within the previous ``window``
+    batches or earlier in the element's own batch. If the key's most recent
+    prior occurrence already fell out of the window, so did every older one
+    — so only the immediate predecessor needs checking (one stable sort,
+    O(n log n))."""
+    keys = np.asarray(keys)
+    n = keys.shape[0]
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    prev = np.full(n, -1, dtype=np.int64)
+    same = sk[1:] == sk[:-1]
+    prev[order[1:][same]] = order[:-1][same]
+    batch = np.arange(n, dtype=np.int64) // batch_size
+    prev_batch = np.where(prev >= 0, prev // batch_size, np.int64(-1))
+    return (prev >= 0) & (prev_batch >= batch - window)

@@ -53,7 +53,7 @@ from .. import compat
 from ..core.batched import BatchResult, make_batched_step
 from ..core.config import DedupConfig
 from ..core.hashing import route_hash
-from ..core.state import FilterState, init_state
+from ..core.state import FilterState, WindowRing, init_state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,10 +94,35 @@ class ShardedDedup:
         self._step_fns: Dict[int, jax.stages.Wrapped] = {}
         self._stream_fns: Dict[int, jax.stages.Wrapped] = {}
 
+    def _state_template(self) -> FilterState:
+        """Structure-only FilterState matching what this service carries —
+        including the swbf window ring (DESIGN §3.7), whose leaves need
+        PartitionSpecs like every other state field."""
+        ring = (WindowRing(0, 0)
+                if self.local_cfg.variant == "swbf" else None)
+        return FilterState(0, 0, 0, 0, ring)
+
     # -------------------------------------------------------------- //
-    def init(self, seed: int | None = None) -> FilterState:
-        """Filter state with a leading shard axis, sharded over mesh_axes."""
-        base = init_state(self.local_cfg, seed)
+    def init(self, seed: int | None = None,
+             event_capacity: int | None = None) -> FilterState:
+        """Filter state with a leading shard axis, sharded over mesh_axes.
+
+        For swbf, each shard's ring slot must absorb one step's WHOLE
+        post-routing dispatch (n_shards · capacity elements — the flat
+        buffer the per-shard step deduplicates), not just the pre-routing
+        local batch. The default sizes the ring for ``run_stream`` /
+        ``make_step(base.batch_size // n_shards)``; driving ``make_step``
+        with a LARGER local batch needs a matching ``event_capacity`` here
+        (n_shards · capacity(local_batch) elements)."""
+        kw = {}
+        if self.local_cfg.variant == "swbf":
+            if event_capacity is None:
+                local_batch = max(1,
+                                  self.scfg.base.batch_size // self.n_shards)
+                event_capacity = (
+                    self.n_shards * self.scfg.capacity(local_batch, self.mesh))
+            kw["event_capacity"] = event_capacity
+        base = init_state(self.local_cfg, seed, **kw)
 
         def stack(x):
             return jnp.broadcast_to(x[None], (self.n_shards, *x.shape))
@@ -108,6 +133,7 @@ class ShardedDedup:
             load=stack(base.load),
             rng=jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
                 base.rng, jnp.arange(self.n_shards)),
+            ring=jax.tree.map(stack, base.ring),   # swbf window ring (§3.7)
         )
         return jax.tree.map(
             lambda x: jax.device_put(x, NamedSharding(
@@ -166,7 +192,7 @@ class ShardedDedup:
         the leading shard axis sharded over mesh_axes."""
         cap = self.scfg.capacity(local_batch, self.mesh)
         state_spec = jax.tree.map(
-            lambda _: P(self.axis), FilterState(0, 0, 0, 0))
+            lambda _: P(self.axis), self._state_template())
         batch_spec = P(self.scfg.batch_axes)
         return compat.shard_map(
             self._local_fn(cap), mesh=self.mesh,

@@ -51,6 +51,18 @@ DEFAULT_CHUNK_B = 1024
 VMEM_FILTER_BYTES_LIMIT = 8 * 1024 * 1024
 
 
+def check_vmem_budget(nbytes: int, what: str) -> None:
+    """Shared guard for every fused kernel (this one and the counter/window
+    kernels in fused_counter_step.py): the filter-resident working set must
+    fit the VMEM budget — larger filters shard across devices first
+    (repro.dedup.sharded)."""
+    if nbytes > VMEM_FILTER_BYTES_LIMIT:
+        raise ValueError(
+            f"{what} {nbytes} B exceeds the {VMEM_FILTER_BYTES_LIMIT} B VMEM "
+            f"budget for the fused step — shard the filter "
+            f"(repro.dedup.sharded) first")
+
+
 def _popcount_sum(x: jnp.ndarray) -> jnp.ndarray:
     """Total set bits of a uint32 vector -> int32 scalar."""
     x = x - ((x >> 1) & jnp.uint32(0x55555555))
@@ -98,11 +110,7 @@ def make_fused_batched_step(cfg, *, tile_w: int = DEFAULT_TILE_W,
         b = keys.shape[0]
         words = state.bits
         k_, w = words.shape
-        if k_ * w * 4 > VMEM_FILTER_BYTES_LIMIT:
-            raise ValueError(
-                f"packed filter {k_ * w * 4} B exceeds the "
-                f"{VMEM_FILTER_BYTES_LIMIT} B VMEM budget for the fused step "
-                f"— shard the filter (repro.dedup.sharded) first")
+        check_vmem_budget(k_ * w * 4, "packed filter")
         tw = _largest_tile(w, tile_w)
         n_tiles = w // tw
 

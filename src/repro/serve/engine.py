@@ -36,7 +36,17 @@ def make_decode_step(cfg: tfm.TransformerConfig):
 
 @dataclasses.dataclass
 class ServeSession:
-    """Request-level dedup in front of any scoring function."""
+    """Request-level dedup in front of any scoring function.
+
+    The response cache is authoritative and probed FIRST for every request:
+    the Bloom verdict is probabilistic in both directions, and gating the
+    cache lookup on it would turn a false-NEGATIVE duplicate into a full
+    recompute despite a cached response sitting right there. The verdict
+    still drives what the filter learns (and the duplicate-traffic stats);
+    the cache is FIFO-bounded at ``cache_size`` entries so long-running
+    sessions keep admitting new responses instead of freezing the first
+    ``cache_size`` keys forever.
+    """
 
     dedup_cfg: DedupConfig
     score_fn: Callable[[dict], np.ndarray]     # batch -> responses
@@ -45,21 +55,35 @@ class ServeSession:
     def __post_init__(self):
         self.engine = Dedup(self.dedup_cfg)
         self.state = self.engine.init()
+        # insertion-ordered dict == FIFO queue: evict via next(iter(...))
         self.cache: dict[int, np.ndarray] = {}
         self.n_served = 0
         self.n_cached = 0
+        self.n_flagged_dup = 0
+
+    def _admit(self, key: int, value: np.ndarray) -> None:
+        """FIFO-bounded insert: evict the oldest entry once full (never when
+        merely refreshing an existing key's response). cache_size <= 0
+        disables caching entirely."""
+        if self.cache_size <= 0:
+            return
+        if key not in self.cache and len(self.cache) >= self.cache_size:
+            self.cache.pop(next(iter(self.cache)))
+        self.cache[key] = value
 
     def serve(self, batch: dict) -> np.ndarray:
         keys = np.asarray(batch["key"], dtype=np.uint32)
         self.state, res = self.engine.process(self.state, jnp.asarray(keys))
-        dup = np.asarray(res.dup)
+        self.n_flagged_dup += int(np.asarray(res.dup).sum())
         out: list[Optional[np.ndarray]] = [None] * len(keys)
-        # serve duplicates from cache when present (a Bloom 'duplicate' may be
-        # a false positive — cache miss then falls through to compute)
+        # cache first, verdict second: a cached response answers the request
+        # whatever the (probabilistic) Bloom verdict says; a cache miss —
+        # duplicate or not — falls through to compute
         need = []
-        for i, (k, d) in enumerate(zip(keys, dup)):
-            if d and int(k) in self.cache:
-                out[i] = self.cache[int(k)]
+        for i, k in enumerate(keys):
+            hit = self.cache.get(int(k))
+            if hit is not None:
+                out[i] = hit
                 self.n_cached += 1
             else:
                 need.append(i)
@@ -68,8 +92,7 @@ class ServeSession:
             scores = np.asarray(self.score_fn(sub))
             for j, i in enumerate(need):
                 out[i] = scores[j]
-                if len(self.cache) < self.cache_size:
-                    self.cache[int(keys[i])] = scores[j]
+                self._admit(int(keys[i]), scores[j])
             self.n_served += len(need)
         return np.stack(out)
 

@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DedupConfig
-from repro.data.streams import clickstream, controlled_distinct_stream, zipf_stream
-from repro.dedup import DedupPipeline, truth_from_stream
+from repro.data.streams import (clickstream, controlled_distinct_stream,
+                                key_collision_count, pair_truth, zipf_stream)
+from repro.dedup import DedupPipeline, StreamMetrics, truth_from_stream
 from repro.serve import ServeSession
 
 
@@ -43,7 +44,8 @@ def test_pipeline_metrics_and_convergence():
 def test_clickstream_fraud_detection():
     """The paper's §1 click-fraud case: bursts of identical clicks must be
     flagged at high recall."""
-    data, truth = clickstream(40_000, fraud_frac=0.1, burst=20, seed=1)
+    data, truth, _collisions = clickstream(40_000, fraud_frac=0.1, burst=20,
+                                           seed=1)
     pipe = DedupPipeline(_cfg(), mode="flag")
     dups = []
     for i in range(0, 40_000 - 1024, 1024):
@@ -75,3 +77,102 @@ def test_serve_session_caches_duplicates():
 def test_truth_from_stream_matches_generator():
     keys, truth = controlled_distinct_stream(5000, 0.4, seed=3)
     assert np.array_equal(truth, truth_from_stream(keys))
+
+
+# ------------------------------------------------------ bugfix regressions //
+def test_serve_cache_probed_before_bloom_verdict():
+    """Regression: a cached response must answer the request even when the
+    Bloom verdict is a false NEGATIVE (the old path only consulted the
+    cache for verdict-positive keys, recomputing a forward pass for free)."""
+    calls = {"n": 0}
+
+    def score_fn(batch):
+        calls["n"] += len(batch["key"])
+        return np.asarray(batch["key"], np.float64) * 3.0
+
+    sess = ServeSession(_cfg(batch_size=4), score_fn)
+    # seed the cache directly: whatever the filter thinks, key 7's response
+    # is known — serving it must not invoke the model for key 7 again
+    sess.cache[7] = np.float64(21.0)
+    out = sess.serve({"key": np.array([7, 8, 9, 10], np.uint32)})
+    assert out[0] == 21.0
+    assert calls["n"] == 3                        # 7 answered from cache
+    assert sess.n_cached == 1
+
+
+def test_serve_cache_fifo_eviction_keeps_admitting():
+    """Regression: once ``cache_size`` was reached the old cache stopped
+    admitting forever; now the oldest entry is FIFO-evicted and new
+    responses keep getting cached."""
+    sess = ServeSession(_cfg(batch_size=4),
+                        lambda b: np.asarray(b["key"], np.float64),
+                        cache_size=4)
+    sess.serve({"key": np.array([1, 2, 3, 4], np.uint32)})
+    sess.serve({"key": np.array([5, 6, 7, 8], np.uint32)})
+    assert len(sess.cache) == 4
+    assert set(sess.cache) == {5, 6, 7, 8}        # oldest four evicted
+    # the still-cached keys are served without recompute
+    calls = {"n": 0}
+    sess.score_fn = lambda b: (calls.__setitem__("n", calls["n"] + len(b["key"]))
+                               or np.asarray(b["key"], np.float64))
+    out = sess.serve({"key": np.array([5, 6, 7, 8], np.uint32)})
+    assert calls["n"] == 0 and np.array_equal(out, [5.0, 6.0, 7.0, 8.0])
+    # refreshing an existing key never evicts
+    sess.serve({"key": np.array([5, 5, 5, 5], np.uint32)})
+    assert set(sess.cache) == {5, 6, 7, 8}
+    # cache_size=0 disables caching (no StopIteration on eviction)
+    off = ServeSession(_cfg(batch_size=4),
+                       lambda b: np.asarray(b["key"], np.float64),
+                       cache_size=0)
+    out = off.serve({"key": np.array([1, 2, 3, 4], np.uint32)})
+    assert np.array_equal(out, [1.0, 2.0, 3.0, 4.0]) and not off.cache
+
+
+def test_clickstream_truth_derived_from_pairs_not_hashed_keys():
+    """Regression: truth_dup comes from the (user, item) pairs; a 32-bit
+    key collision between two distinct clicks must NOT be recorded as a
+    true duplicate."""
+    data, truth, collisions = clickstream(30_000, fraud_frac=0.1, burst=20,
+                                          seed=2)
+    assert np.array_equal(truth, pair_truth(data["user"], data["item"]))
+    assert collisions == key_collision_count(
+        data["user"], data["item"], data["key"])
+    assert all(v.shape == (30_000,) for v in data.values())  # columns only
+    # construct an explicit collision: two distinct pairs, same 32-bit key
+    # (birthday search over random pairs through the generator's key mix —
+    # ~8 expected hits among 2^18 draws, deterministic at this seed)
+    rng = np.random.default_rng(0)
+    n = 1 << 18
+    u = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+    i = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+    k64 = (u.astype(np.uint64) << 17) ^ i.astype(np.uint64)
+    k32 = ((k64 * np.uint64(0x9E3779B97F4A7C15))
+           >> np.uint64(32)).astype(np.uint32)
+    pairs = (u.astype(np.uint64) << np.uint64(32)) | i.astype(np.uint64)
+    order = np.argsort(k32, kind="stable")
+    coll = (k32[order][1:] == k32[order][:-1]) & \
+           (pairs[order][1:] != pairs[order][:-1])
+    assert coll.any(), "no key collision found (seed drifted?)"
+    j = int(np.argmax(coll))
+    a, b = order[j], order[j + 1]
+    users = np.array([u[a], u[b]], np.uint32)
+    items = np.array([i[a], i[b]], np.uint32)
+    key = np.array([k32[a], k32[b]], np.uint32)
+    truth2 = pair_truth(users, items)
+    assert not truth2.any()                       # distinct clicks — no dup
+    assert key_collision_count(users, items, key) == 1
+
+
+def test_stream_metrics_clock_starts_at_first_update(monkeypatch):
+    """Regression: ``throughput`` must not charge warmup/compile time spent
+    between metrics construction and the first batch."""
+    from repro.dedup import metrics as metrics_mod
+    t = {"now": 100.0}
+    monkeypatch.setattr(metrics_mod.time, "perf_counter", lambda: t["now"])
+    m = StreamMetrics()
+    assert m.throughput == 0.0                    # nothing ingested yet
+    t["now"] = 160.0                              # 60 s of jit warmup
+    m.update(np.zeros(1000, bool), None)
+    t["now"] = 162.0                              # 2 s of actual ingest
+    assert m.throughput == 1000 / 2.0             # warmup not charged
+

@@ -6,7 +6,8 @@ import pytest
 
 from repro.core import DedupConfig, Dedup
 from repro.core.theory import (sbf_stable_fpr, standard_bloom_fpr,
-                               verify_monotone_convergence, x_series)
+                               verify_monotone_convergence, x_series,
+                               y_series)
 from conftest import make_stream
 import jax.numpy as jnp
 
@@ -79,3 +80,18 @@ def test_sbf_stable_fpr_hits_target():
 def test_standard_bloom_fpr_sanity():
     # classic: n=m/10, k=7 -> ~0.008
     assert standard_bloom_fpr(n=1e5, m_bits=1e6, k=7) < 0.01
+
+
+def test_y_series_convention_shared_with_x_series():
+    """Bugfix regression: one Y convention (Eq. 3.7, Y_m = ((U-1)/U)^(m-1),
+    1-indexed). ``y_series(1) == 1`` — the first element is always distinct
+    — and ``x_series`` consumes the same helper, so its Y/fpr/fnr columns
+    match ``y_series`` exactly instead of being shifted by one position."""
+    U = 5000.0
+    assert y_series(1, U) == 1.0
+    assert abs(y_series(2, U) - (1.0 - 1.0 / U)) < 1e-12
+    cfg = DedupConfig.for_variant("bsbf", memory_bits=1 << 10)
+    curves = x_series(cfg, 500, universe=U)
+    np.testing.assert_allclose(curves.Y, y_series(curves.m, U), rtol=0,
+                               atol=0)
+    np.testing.assert_allclose(curves.fpr, curves.Y * curves.X, atol=0)
