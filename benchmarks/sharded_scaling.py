@@ -4,6 +4,15 @@ AND the SBF counter-plane engine (DESIGN.md §3.6), so the sharded artifact
 covers a counter variant.
 
     PYTHONPATH=src python -m benchmarks.sharded_scaling [--fast]
+    PYTHONPATH=src python -m benchmarks.sharded_scaling --rebalance [--fast]
+
+``--rebalance`` runs the elastic-rebalance sweep instead (DESIGN.md §4.4):
+a zipf(1.2) range-skewed stream over 8 simulated devices, rebalance-on vs
+rebalance-off — per-shard load spread (max/mean ratio), throughput,
+rebalance count — plus dup-verdict bit-parity against a 1-device oracle
+holding all buckets, on the jnp AND (at reduced size — interpret mode)
+pallas backends. Emits ``BENCH_rebalance.json``, validated by
+``scripts/bench_check.py --rebalance``.
 
 Each device count runs in its OWN subprocess because
 ``xla_force_host_platform_device_count`` is locked at the first jax init —
@@ -37,7 +46,10 @@ import time
 
 BENCH_PATH = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                           "BENCH_sharded.json"))
+REBALANCE_PATH = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                              "BENCH_rebalance.json"))
 DEVICE_COUNTS = (1, 2, 4, 8)
+REBALANCE_DEVICES = 8
 
 
 # ------------------------------------------------------------------ worker
@@ -88,23 +100,96 @@ def measure(devices: int, fast: bool = True) -> dict:
     return rec
 
 
+# ------------------------------------------------------ rebalance worker
+def measure_rebalance(devices: int, fast: bool, backend: str) -> dict:
+    """One elastic-rebalance measurement (inside the subprocess): the
+    range-skewed zipf(1.2) stream through the elastic sharded scan,
+    rebalance-on (threshold 1.25) and — on the multi-device run —
+    rebalance-off (threshold 0, buckets static), with per-shard load
+    spread, throughput and a dup-verdict digest for the parity check.
+    ``capacity_factor == n_buckets`` makes the dispatch lossless (zero
+    overflow), which is what makes bit-parity across device counts a fair
+    assertion rather than luck (DESIGN §4.4)."""
+    import hashlib
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.compat import set_mesh
+    from repro.core import DedupConfig
+    from repro.data.streams import zipf_range_stream
+    from repro.dedup import ShardedDedup, ShardedDedupConfig
+
+    assert len(jax.devices()) == devices, (len(jax.devices()), devices)
+    if backend == "pallas":        # interpret mode off-TPU: tiny, 1 timed run
+        n, batch, mem, nb, reps = 1 << 12, 512, 1 << 15, 16, 1
+    elif fast:
+        n, batch, mem, nb, reps = 1 << 16, 2048, 1 << 18, 16, 3
+    else:
+        n, batch, mem, nb, reps = 1 << 18, 4096, 1 << 20, 32, 3
+    mesh = jax.make_mesh((devices, 1), ("data", "model"))
+    keys, _ = zipf_range_stream(n, universe=max(n // 2, 1 << 10), a=1.2,
+                                seed=11)
+    jkeys = jnp.asarray(keys)
+    kw = dict(packed=True, backend="pallas") if backend == "pallas" else {}
+    out = {"devices": devices, "n": n, "batch": batch, "buckets": nb,
+           "backend": backend}
+    modes = (("on", 1.25), ("off", 0.0)) if devices > 1 else (("on", 1.25),)
+    for tag, thr in modes:
+        cfg = DedupConfig.for_variant(
+            "rlbsbf", memory_bits=mem, batch_size=batch,
+            rebalance_buckets=nb, rebalance_threshold=thr, **kw)
+        sd = ShardedDedup(
+            ShardedDedupConfig(base=cfg, capacity_factor=float(nb)), mesh)
+        with set_mesh(mesh):
+            state, dup, ovf = sd.run_stream(sd.init(), jkeys)   # compile
+            np.asarray(dup)
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                state, dup, ovf = sd.run_stream(sd.init(), jkeys)
+                np.asarray(dup)
+                best = min(best, time.perf_counter() - t0)
+        load = np.asarray(state.load)
+        shard_load = load.sum(axis=tuple(range(1, load.ndim)))
+        out[tag] = {
+            "eps": n / best,
+            "load_ratio": float(shard_load.max()
+                                / max(shard_load.mean(), 1e-9)),
+            "shard_load": shard_load.tolist(),
+            "n_rebalances": int(np.asarray(state.router.n_rebalances)),
+            "overflow": int(np.asarray(ovf).sum()),
+            "stream_cache": sd.stream_cache_size(),
+            "digest": hashlib.sha256(np.asarray(dup).tobytes()).hexdigest(),
+        }
+    return out
+
+
 def _worker_main(argv) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--worker", type=int, required=True)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--rebalance", action="store_true")
+    ap.add_argument("--backend", default="jnp")
     args = ap.parse_args(argv)
-    print(json.dumps(measure(args.worker, fast=args.fast)))
+    if args.rebalance:
+        print(json.dumps(measure_rebalance(args.worker, fast=args.fast,
+                                           backend=args.backend)))
+    else:
+        print(json.dumps(measure(args.worker, fast=args.fast)))
     return 0
 
 
 # ------------------------------------------------------------------ parent
-def _spawn(devices: int, fast: bool) -> dict:
+def _spawn(devices: int, fast: bool, extra=()) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = "src" + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    cmd = [sys.executable, "-m", "benchmarks.sharded_scaling",
-           "--worker", str(devices)] + (["--fast"] if fast else [])
+    cmd = ([sys.executable, "-m", "benchmarks.sharded_scaling",
+            "--worker", str(devices)] + (["--fast"] if fast else [])
+           + list(extra))
     out = subprocess.run(cmd, capture_output=True, text=True, env=env,
                          cwd=os.path.dirname(os.path.dirname(
                              os.path.abspath(__file__))))
@@ -137,6 +222,72 @@ def write_sharded_artifact(current: dict, meta: dict) -> str:
     with open(BENCH_PATH, "w") as f:
         json.dump(doc, f, indent=1)
     return BENCH_PATH
+
+
+def write_rebalance_artifact(current: dict, meta: dict) -> str:
+    prev = {}
+    if os.path.exists(REBALANCE_PATH):
+        with open(REBALANCE_PATH) as f:
+            prev = json.load(f)
+    baseline = prev.get("baseline")
+    # only a fully-successful capture may freeze the anchor: a failed
+    # backend record must not become a permanent baseline
+    ok = all("error" not in current.get(b, {}) for b in ("jnp", "pallas"))
+    if baseline is None and ok:
+        baseline = dict(current, baseline_seeded_from_current=True)
+    doc = {"schema": 1, "baseline": baseline, "current": current,
+           "meta": meta}
+    with open(REBALANCE_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    return REBALANCE_PATH
+
+
+def main_rebalance(fast: bool = False) -> list:
+    """The §4.4 acceptance sweep: per-backend subprocess pairs — the
+    8-device run (rebalance on AND off) and the 1-device all-buckets oracle
+    — digest-compared for bit-parity, written to BENCH_rebalance.json."""
+    from .common import csv_row, save_artifact
+
+    current = {}
+    for backend in ("jnp", "pallas"):
+        multi = _spawn(REBALANCE_DEVICES, fast,
+                       ["--rebalance", "--backend", backend])
+        oracle = _spawn(1, fast, ["--rebalance", "--backend", backend])
+        if "error" in multi or "error" in oracle:
+            err = multi.get("error") or oracle.get("error")
+            print(f"[rebalance] backend={backend} FAILED: {err}",
+                  file=sys.stderr)
+            current[backend] = {"error": err}
+            continue
+        rec = dict(multi, oracle=oracle["on"])
+        rec["parity"] = (multi["on"]["digest"] == multi["off"]["digest"]
+                         == oracle["on"]["digest"])
+        current[backend] = rec
+        on, off = multi["on"], multi["off"]
+        print(f"[rebalance] {backend}: load max/mean "
+              f"{off['load_ratio']:.2f} -> {on['load_ratio']:.2f} "
+              f"({on['n_rebalances']} repartitions), "
+              f"eps on/off {on['eps']:.0f}/{off['eps']:.0f}, "
+              f"parity={'OK' if rec['parity'] else 'BROKEN'}")
+
+    rows = []
+    for backend, rec in current.items():
+        if "on" in rec:
+            rows.append(csv_row(
+                f"rebalance/{backend}", 1e6 / rec["on"]["eps"],
+                f"ratio {rec['off']['load_ratio']:.2f}->"
+                f"{rec['on']['load_ratio']:.2f} parity={rec['parity']}"))
+        else:
+            rows.append(csv_row(f"rebalance/{backend}", 0.0, "ERROR"))
+    save_artifact("rebalance", current)
+    import jax
+    path = write_rebalance_artifact(
+        current, meta={"fast": fast, "backend": jax.default_backend(),
+                       "captured": time.strftime("%Y-%m-%d"),
+                       "note": "simulated host devices share one CPU; "
+                               "pallas rows run in interpret mode"})
+    rows.append(csv_row("rebalance/artifact", 0.0, path))
+    return rows
 
 
 def main(fast: bool = False) -> list:
@@ -181,4 +332,7 @@ if __name__ == "__main__":
     if "--worker" in sys.argv:
         raise SystemExit(_worker_main(sys.argv[1:]))
     fast = "--fast" in sys.argv
-    print("\n".join(main(fast=fast)))
+    if "--rebalance" in sys.argv:
+        print("\n".join(main_rebalance(fast=fast)))
+    else:
+        print("\n".join(main(fast=fast)))

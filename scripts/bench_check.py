@@ -4,6 +4,7 @@
     PYTHONPATH=src python scripts/bench_check.py [--tol 0.25] [--update]
     PYTHONPATH=src python scripts/bench_check.py --sharded [--tol 0.35]
     PYTHONPATH=src python scripts/bench_check.py --counter [--tol 0.35]
+    PYTHONPATH=src python scripts/bench_check.py --rebalance
 
 Exit codes: 0 = within tolerance (or improved), 1 = regression, 2 = missing
 artifact. ``--update`` rewrites the artifact's ``current`` section with the
@@ -36,6 +37,16 @@ windowed-dedup acceptance bar (DESIGN §3.7): at the paper-scale row
 (``mem_26``) the swbf plane engine must hold >= 2x the dense8-idiom
 reference's elems/s, with the one-dispatch stream contract intact
 (stream_cache == 1).
+
+``--rebalance`` validates the committed BENCH_rebalance.json (emitted by
+``python -m benchmarks.sharded_scaling --rebalance``) against the DESIGN
+§4.4 acceptance bar, per backend (jnp and pallas): the monitor fired
+(n_rebalances >= 1), rebalance-on ends with a strictly LOWER max/mean
+per-shard load ratio than rebalance-off, the lossless dispatch overflowed
+nothing, the one-dispatch stream contract held, and the dup-verdict digests
+are bit-identical across rebalance-on / rebalance-off / the 1-device
+all-buckets oracle (placement, not math). Wall-clock is recorded but not
+gated — the load-spread and parity claims are deterministic.
 """
 
 from __future__ import annotations
@@ -148,6 +159,51 @@ def _check_mem_sweep_gate(label: str, bench_path: str, mem_sweep, gate_mem,
     return 1 if (fail or speedup < 2.0) else 0
 
 
+def check_rebalance() -> int:
+    """BENCH_rebalance.json: the DESIGN §4.4 acceptance bar — deterministic
+    claims only (load-spread reduction, repartition count, zero overflow,
+    one-dispatch contract, on/off/oracle digest parity), nothing re-measured
+    and no wall-clock gate."""
+    from benchmarks.sharded_scaling import REBALANCE_PATH
+
+    if not os.path.exists(REBALANCE_PATH):
+        print(f"bench_check: no committed artifact at {REBALANCE_PATH} — "
+              f"run `python -m benchmarks.sharded_scaling --rebalance "
+              f"--fast` first")
+        return 2
+    with open(REBALANCE_PATH) as f:
+        doc = json.load(f)
+    current = doc.get("current", {})
+    fail = False
+    for backend in ("jnp", "pallas"):
+        rec = current.get(backend, {})
+        if "on" not in rec:
+            print(f"rebalance {backend:7s}: MISSING   REGRESSION")
+            fail = True
+            continue
+        on, off = rec["on"], rec["off"]
+        problems = []
+        if on["n_rebalances"] < 1:
+            problems.append("monitor never fired")
+        if not on["load_ratio"] < off["load_ratio"]:
+            problems.append(f"load ratio not reduced "
+                            f"({off['load_ratio']:.2f} -> "
+                            f"{on['load_ratio']:.2f})")
+        if on["overflow"] or off["overflow"]:
+            problems.append("dispatch overflowed (parity not lossless)")
+        if on.get("stream_cache") != 1 or off.get("stream_cache") != 1:
+            problems.append("stream_cache != 1")
+        if not rec.get("parity"):
+            problems.append("on/off/oracle digests differ")
+        status = "  REGRESSION(" + "; ".join(problems) + ")" if problems \
+            else "ok"
+        print(f"rebalance {backend:7s}: ratio {off['load_ratio']:.2f} -> "
+              f"{on['load_ratio']:.2f}, {on['n_rebalances']} repartitions, "
+              f"parity={rec.get('parity')}   {status}")
+        fail = fail or bool(problems)
+    return 1 if fail else 0
+
+
 def check_counter(tol: float) -> int:
     """BENCH_counter.json: trajectory + the DESIGN §3.6 acceptance bar —
     plane-layout SBF >= 2x dense8 SBF elems/s at the paper-scale row."""
@@ -186,7 +242,13 @@ def main(argv=None) -> int:
                     help="validate BENCH_window.json (swbf planes vs the "
                          "dense8-idiom reference, incl. the >= 2x "
                          "paper-scale gate)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="validate BENCH_rebalance.json (elastic rebalance "
+                         "load-spread reduction + on/off/oracle verdict "
+                         "parity, DESIGN §4.4)")
     args = ap.parse_args(argv)
+    if args.rebalance:
+        return check_rebalance()
     if args.sharded:
         return check_sharded(0.35 if args.tol is None else args.tol)
     if args.counter:

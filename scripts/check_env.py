@@ -29,6 +29,8 @@ _DEPENDENTS = {
     "make_mesh": "every mesh construction site (launch/mesh.py, tests, "
                  "examples)",
     "all_to_all": "the sharded dedup dispatch (repro.dedup.sharded)",
+    "ppermute": "the elastic shard-rebalance permute (repro.dedup.sharded, "
+                "repro.distributed.sharding.rebalance_collect; DESIGN §4.4)",
     "pallas": "the fused single-launch steps (repro.kernels.fused_step, "
               "repro.kernels.fused_counter_step, cfg.backend='pallas')",
 }
@@ -50,6 +52,7 @@ def main() -> int:
           f"{'jax.set_mesh / use_mesh' if report['set_mesh'] else 'none (0.4.x explicit-mesh path — OK)'}")
     print(f"  make_mesh        : {'ok' if report['make_mesh'] else 'MISSING'}")
     print(f"  all_to_all       : {'ok' if report['all_to_all'] else 'MISSING'}")
+    print(f"  ppermute         : {'ok' if report['ppermute'] else 'MISSING'}")
     print(f"  pallas           : {'ok' if report['pallas'] else 'MISSING'}")
 
     # cost_analysis normalization must hold on a real compiled executable

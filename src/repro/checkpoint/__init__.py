@@ -1,6 +1,9 @@
-"""Fault-tolerant checkpointing (+ filter-layout migration, DESIGN.md §3.6)."""
+"""Fault-tolerant checkpointing (+ filter-layout migration, DESIGN.md §3.6,
+and elastic-shard re-meshing, §4.4)."""
 
 from .manager import CheckpointManager
-from .migrate import layout_meta, migrate_filter_state
+from .migrate import (layout_meta, migrate_filter_state,
+                      migrate_sharded_state, router_meta)
 
-__all__ = ["CheckpointManager", "layout_meta", "migrate_filter_state"]
+__all__ = ["CheckpointManager", "layout_meta", "migrate_filter_state",
+           "migrate_sharded_state", "router_meta"]

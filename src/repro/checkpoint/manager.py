@@ -40,6 +40,23 @@ def _is_key(x) -> bool:
         return False
 
 
+def _jsonable(x):
+    """meta.json-safe view of an ``extra_meta`` value: device/numpy arrays
+    become lists, numpy scalars become python scalars — so callers can stamp
+    live state (e.g. the elastic router table, ``migrate.router_meta``)
+    without hand-converting, and a stray array can never corrupt a save
+    half-way through the atomic commit."""
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.generic):
+        return x.item()
+    if hasattr(x, "tolist") and hasattr(x, "dtype"):     # np / device arrays
+        return np.asarray(x).tolist()
+    return x
+
+
 def _flatten(tree) -> dict:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -100,7 +117,7 @@ class CheckpointManager:
         flat = _flatten(tree)
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
         meta = {"step": step, "time": time.time(),
-                "keys": sorted(flat.keys()), **(extra_meta or {})}
+                "keys": sorted(flat.keys()), **_jsonable(extra_meta or {})}
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
         if os.path.exists(final):

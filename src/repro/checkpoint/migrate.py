@@ -1,4 +1,5 @@
-"""Filter-state layout migration (DESIGN.md §3.6).
+"""Filter-state layout migration (DESIGN.md §3.6) and elastic-shard
+re-meshing (§4.4).
 
 A checkpoint written by a dense8 engine can be restored into a plane-layout
 engine (and back): the cell VALUES are the portable contract, the layout is
@@ -9,6 +10,15 @@ re-encodes the cells. Because the dense8 and plane engines are bit-identical
 (same probes, same rng threading, same cell values — tests/
 test_counter_planes.py), a stream resumed after migration continues exactly
 as if the layout had never changed.
+
+The same portability contract covers the elastic sharded path: the BUCKET
+(not the shard) is the portable unit — each bucket sub-filter is
+self-contained, and the router table (``FilterState.router``) records where
+each one lives. ``router_meta`` stamps the table into ``meta.json``;
+``migrate_sharded_state`` re-applies it when a checkpoint moves between
+shard counts, gathering buckets into bucket-id order and re-stacking them
+onto the destination mesh's canonical block assignment
+(tests/test_rebalance.py).
 """
 
 from __future__ import annotations
@@ -17,12 +27,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.config import DedupConfig
 from ..core.packed import pack_bits, pack_cells, unpack_bits, unpack_cells
-from ..core.state import FilterState
+from ..core.state import FilterState, init_router
 
-__all__ = ["layout_meta", "migrate_filter_state"]
+__all__ = ["layout_meta", "migrate_filter_state", "router_meta",
+           "migrate_sharded_state"]
 
 
 def _fresh(x):
@@ -52,6 +64,66 @@ def layout_meta(cfg: DedupConfig) -> dict:
         "filter_window": cfg.window if cfg.variant == "swbf" else 0,
         "filter_cbf_bits": cfg.cbf_bits if cfg.variant == "swbf" else 0,
     }
+
+
+def router_meta(state: FilterState) -> dict:
+    """The elastic router facts a sharded checkpoint must carry (§4.4):
+    the bucket->shard table itself (small — one int per bucket) plus the
+    rebalance counter, host-readable from ``meta.json`` so an operator can
+    see where every key range lived at save time without loading arrays.
+    Empty for non-elastic states (no router leaf)."""
+    if state.router is None:
+        return {}
+    assign = np.asarray(state.router.assign)
+    return {
+        "router_buckets": int(assign.shape[0]),
+        "router_assign": assign.tolist(),
+        "router_n_rebalances": int(np.asarray(state.router.n_rebalances)),
+    }
+
+
+def migrate_sharded_state(state: FilterState, dst_shards: int) -> FilterState:
+    """Re-mesh an ELASTIC sharded state onto ``dst_shards`` devices.
+
+    Leaves carry (src_shards, b_r, ...); the router table says which bucket
+    occupies each (shard, slot). Buckets are gathered into bucket-id order
+    (undoing whatever placement the load-triggered rebalances left behind)
+    and re-stacked as (dst_shards, n_buckets/dst_shards, ...) under the
+    canonical block assignment — the same layout ``ShardedDedup.init``
+    builds, so ``CheckpointManager.restore`` against a fresh ``init()``
+    template device_puts each bucket onto its new owner. Bucket contents
+    (bits, position, load, rng, ring slots) are untouched — placement
+    changes, the math doesn't, so a stream resumed on the new mesh continues
+    bit-identically (tests/test_rebalance.py). ``n_rebalances`` carries
+    over; fresh buffers throughout (donation safety, as ``_fresh``)."""
+    if state.router is None:
+        raise ValueError("migrate_sharded_state needs an elastic state "
+                         "(FilterState.router is None — static-hash sharded "
+                         "and single-device states have no bucket unit)")
+    assign = np.asarray(state.router.assign)
+    nb = int(assign.shape[0])
+    if nb % dst_shards:
+        raise ValueError(f"cannot re-mesh {nb} buckets onto {dst_shards} "
+                         f"shards: not divisible")
+    # slot of each bucket within its source owner (bucket-id order rank)
+    slot_of = np.zeros(nb, np.int64)
+    counts: dict = {}
+    for g in range(nb):
+        slot_of[g] = counts.get(int(assign[g]), 0)
+        counts[int(assign[g])] = slot_of[g] + 1
+    src_b_r = state.position.shape[1]
+    flat_idx = assign.astype(np.int64) * src_b_r + slot_of   # bucket -> flat
+
+    def leaf(x):
+        flat = jnp.reshape(jnp.asarray(x), (-1, *x.shape[2:]))
+        ordered = jnp.take(flat, jnp.asarray(flat_idx), axis=0)
+        out = jnp.reshape(ordered, (dst_shards, nb // dst_shards,
+                                    *x.shape[2:]))
+        return jnp.array(out, copy=True)                 # fresh buffers
+
+    core = jax.tree.map(leaf, state._replace(router=None))
+    return core._replace(router=init_router(nb, dst_shards)._replace(
+        n_rebalances=_fresh(state.router.n_rebalances)))
 
 
 def _cells_from_state(state: FilterState, cfg: DedupConfig) -> jnp.ndarray:
@@ -96,9 +168,11 @@ def migrate_filter_state(state: FilterState, src_cfg: DedupConfig,
             bits = planes[0] if dst_cfg.n_planes == 1 else planes
         else:
             bits = pack_bits(cells.astype(jnp.uint8))     # (k, W)
-    # the swbf window ring (DESIGN §3.7) is layout-independent word data —
-    # it carries over with fresh buffers like position/load/rng
+    # the swbf window ring (§3.7) and elastic router table (§4.4) are
+    # layout-independent word data — they carry over with fresh buffers
+    # like position/load/rng
     ring = jax.tree.map(_fresh, state.ring)
+    router = jax.tree.map(_fresh, state.router)
     return FilterState(bits=bits, position=_fresh(state.position),
                        load=_fresh(state.load), rng=_fresh(state.rng),
-                       ring=ring)
+                       ring=ring, router=router)

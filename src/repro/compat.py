@@ -22,6 +22,11 @@ Wrapped surfaces:
   * ``cost_analysis_dict`` — ``compiled.cost_analysis()`` returned a
                              one-element list of dicts on 0.4.x and a plain
                              dict on newer jax; normalize to a dict.
+  * ``ppermute``           — the static collective-permute primitive behind
+                             the elastic shard rebalance (DESIGN §4.4):
+                             ``jax.lax.ppermute`` today, with the historical
+                             ``pshuffle``/future renames resolved at call
+                             time like every other surface here.
 """
 
 from __future__ import annotations
@@ -106,6 +111,31 @@ def set_mesh(mesh):
     yield mesh                                           # jax 0.4.x
 
 
+# ----------------------------------------------------------------- ppermute
+def _resolve_ppermute() -> Callable:
+    """The installed jax's collective-permute callable, whatever its name.
+    (``pshuffle`` is NOT an acceptable fallback — its ``perm`` is a source
+    list, a different convention from ppermute's (source, dest) pairs.)"""
+    for name in ("ppermute", "collective_permute"):
+        fn = getattr(jax.lax, name, None)
+        if fn is not None:
+            return fn
+    raise NotImplementedError(                           # pragma: no cover
+        "installed jax.lax has no ppermute/collective_permute — run "
+        "scripts/check_env.py")
+
+
+def ppermute(x: Any, axis_name, perm) -> Any:
+    """``jax.lax.ppermute`` across jax versions: send each device's value of
+    ``x`` (a pytree) along the STATIC ``perm`` schedule of (source, dest)
+    pairs over ``axis_name`` (a name or tuple of names, linearized like
+    ``all_to_all``). The rebalance permute (DESIGN §4.4) builds its dynamic
+    re-partition out of a full ring of these static sends — the permutation
+    XLA compiles never depends on runtime load."""
+    fn = _resolve_ppermute()
+    return fn(x, axis_name, perm)
+
+
 # ------------------------------------------------------------ jit internals
 def jit_cache_size(fn) -> int:
     """Compiled-specialization count of a jitted callable.
@@ -161,6 +191,11 @@ def jax_api_report() -> Dict[str, Any]:
     report["make_mesh"] = hasattr(jax, "make_mesh")
     report["all_to_all"] = hasattr(jax.lax, "all_to_all")
     try:
+        _resolve_ppermute()
+        report["ppermute"] = True
+    except NotImplementedError:                          # pragma: no cover
+        report["ppermute"] = False
+    try:
         from jax.experimental import pallas  # noqa: F401
         report["pallas"] = True
     except ImportError:                                  # pragma: no cover
@@ -169,7 +204,7 @@ def jax_api_report() -> Dict[str, Any]:
 
 
 REQUIRED_APIS = ("shard_map", "set_mesh_or_explicit", "make_mesh",
-                 "all_to_all", "pallas")
+                 "all_to_all", "ppermute", "pallas")
 
 
 def missing_apis() -> list:
@@ -187,6 +222,8 @@ def missing_apis() -> list:
         missing.append("make_mesh")
     if not r["all_to_all"]:
         missing.append("all_to_all")
+    if not r["ppermute"]:
+        missing.append("ppermute")
     if not r["pallas"]:
         missing.append("pallas")
     return missing

@@ -108,6 +108,18 @@ class DedupConfig:
                                          # default is exact incremental O(B))
     # --- distribution ---
     shards: int = 1                      # key-space partitions (devices)
+    # --- elastic shard rebalance (DESIGN §4.4) ---
+    rebalance_buckets: int = 0           # >0: elastic sharded routing — the
+                                         # key RANGE space splits into this
+                                         # many router buckets (each its own
+                                         # sub-filter; must divide by the
+                                         # mesh's shard count). 0 = the
+                                         # static hash-routed sharded path.
+    rebalance_threshold: float = 0.0     # max/mean per-shard load ratio that
+                                         # triggers a re-partition (ratio is
+                                         # always >= 1, so use > 1.0);
+                                         # 0 disables the load monitor —
+                                         # buckets never move.
 
     # ------------------------------------------------------------------ //
     @property
@@ -204,6 +216,16 @@ class DedupConfig:
         if self.backend == "pallas" and not self.is_planes:
             raise ValueError("pallas backend requires the plane layout "
                              "(layout='planes' or packed=True)")
+        if self.rebalance_buckets < 0:
+            raise ValueError("rebalance_buckets must be >= 0")
+        if self.rebalance_threshold != 0.0 and self.rebalance_threshold <= 1.0:
+            raise ValueError(
+                "rebalance_threshold is a max/mean load ratio (always >= 1): "
+                "use a value > 1.0, or 0 to disable the monitor")
+        if self.rebalance_threshold > 1.0 and self.rebalance_buckets == 0:
+            raise ValueError(
+                "rebalance_threshold needs elastic routing: set "
+                "rebalance_buckets > 0 (DESIGN §4.4)")
         return self
 
     @staticmethod

@@ -11,6 +11,15 @@ All entry points are functionally pure: state in, state out — which is what
 lets the same engine run under pjit/shard_map (see repro.dedup.sharded) and be
 checkpointed mid-stream (see repro.checkpoint).
 
+Contract and state layout: an engine is fully determined by its frozen
+``DedupConfig``; the state it threads is the ``FilterState`` pytree — bits
+in the configured cell layout (dense8 bytes or packed bit-planes,
+DESIGN.md §3.6), the 1-indexed stream position, the exact incrementally
+tracked load (§3.1), the rng, and the optional swbf window ring (§3.7).
+At fixed seed, dup reports are deterministic across refactors and
+bit-identical between the jnp and pallas backends (§3.4); batched-vs-
+oracle divergence is bounded per DESIGN.md §2.
+
 Compile caching (DESIGN.md §3.5): every jitted callable is built once in
 ``__init__`` and reused across calls — ``run_stream`` re-running the same
 stream length never re-traces (regression-tested via ``stream_cache_size``).

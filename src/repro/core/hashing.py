@@ -23,6 +23,7 @@ __all__ = [
     "hash_slots",
     "hash_positions",
     "route_hash",
+    "range_bucket",
     "derive_seeds",
 ]
 
@@ -103,6 +104,27 @@ def route_hash(keys: jnp.ndarray, n_shards: int, base_seed: int) -> jnp.ndarray:
     if n_shards & (n_shards - 1) == 0:
         return (h & jnp.uint32(n_shards - 1)).astype(jnp.int32)
     return (h % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def range_bucket(keys: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Router bucket in [0, n_buckets) by contiguous KEY RANGE — the elastic
+    sharded path's first-level partition (DESIGN §4.4).
+
+    Unlike ``route_hash`` (uniform in expectation over the key *space*, so
+    per-shard filter load stays balanced no matter how skewed the traffic),
+    range partitioning deliberately preserves key locality: a skewed key
+    space loads buckets unevenly, and the load-triggered rebalance re-packs
+    the bucket->shard table to even the shards back out. Power-of-two bucket
+    counts reduce to a shift; the general case is a clipped division.
+    """
+    keys = keys.astype(jnp.uint32)
+    if n_buckets & (n_buckets - 1) == 0:
+        shift = 32 - (n_buckets.bit_length() - 1)
+        return (keys >> jnp.uint32(shift)).astype(jnp.int32) if shift < 32 \
+            else jnp.zeros(keys.shape, jnp.int32)
+    stride = np.uint32((1 << 32) // n_buckets + 1)     # ceil(2^32 / nb)
+    return jnp.minimum(keys // stride,
+                       jnp.uint32(n_buckets - 1)).astype(jnp.int32)
 
 
 def uniform_positions(rng: jax.Array, shape, s: int) -> jnp.ndarray:

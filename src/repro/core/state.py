@@ -21,6 +21,12 @@ form of their packed event planes, re-expanded at expiry) and the slot the
 next batch will expire/overwrite. ``None`` for every other variant — as a
 pytree None is an empty subtree, so the 4-leaf historical state shape (and
 every checkpoint written by it) is unchanged.
+
+``router`` is the elastic sharded path's dynamic key-range table
+(DESIGN.md §4.4): which shard owns each router bucket, replicated across
+devices and remapped by the load-triggered rebalance. ``None`` on the
+single-device engines and the static-hash sharded path — same
+empty-subtree trick as ``ring``.
 """
 
 from __future__ import annotations
@@ -53,12 +59,31 @@ class WindowRing(NamedTuple):
     slot: jnp.ndarray
 
 
+class RouterState(NamedTuple):
+    """Dynamic key-range router table of the ELASTIC sharded path
+    (DESIGN.md §4.4). The uint32 key space splits into ``n_buckets``
+    contiguous ranges; bucket ``g`` is a self-contained sub-filter (its own
+    bits/position/load/rng/ring) that the load-triggered rebalance moves
+    between devices wholesale — placement changes, the math doesn't.
+
+    ``assign``: (n_buckets,) int32 — bucket -> owner shard. Replicated on
+    every device (each must route identically); carried as a state leaf so
+    it is donated/scanned/checkpointed with the filter it describes.
+    ``n_rebalances``: () int32 — re-partitions fired so far (monitoring).
+    ``None`` on the single-device and static-hash sharded paths — an empty
+    pytree subtree, so the historical state shape is unchanged.
+    """
+    assign: jnp.ndarray
+    n_rebalances: jnp.ndarray
+
+
 class FilterState(NamedTuple):
     bits: jnp.ndarray       # (k, s) uint8 | (k, W) uint32 | (d, k, W) uint32
     position: jnp.ndarray   # () int32 — 1-indexed next stream position
     load: jnp.ndarray       # (k,) int32 — set bits (nonzero cells for SBF)
     rng: jax.Array          # PRNG key for the randomized deletions
     ring: Optional[WindowRing] = None   # swbf sliding-window ring (§3.7)
+    router: Optional[RouterState] = None  # elastic shard router (§4.4)
 
     @property
     def is_packed(self) -> bool:
@@ -81,6 +106,21 @@ def init_ring(cfg: DedupConfig, event_capacity: int | None = None
         events=jnp.full((cfg.window, cap * cfg.k), 32 * cfg.s_words,
                         dtype=jnp.int32),
         slot=jnp.asarray(0, dtype=jnp.int32),
+    )
+
+
+def init_router(n_buckets: int, n_shards: int) -> RouterState:
+    """Canonical block assignment: bucket ``g`` starts on shard
+    ``g // (n_buckets/n_shards)`` — contiguous key ranges stay contiguous
+    per shard until the first load-triggered re-partition (DESIGN §4.4)."""
+    if n_buckets % n_shards:
+        raise ValueError(
+            f"rebalance_buckets {n_buckets} must divide by the shard "
+            f"count {n_shards}")
+    per = n_buckets // n_shards
+    return RouterState(
+        assign=(jnp.arange(n_buckets, dtype=jnp.int32) // per),
+        n_rebalances=jnp.asarray(0, dtype=jnp.int32),
     )
 
 

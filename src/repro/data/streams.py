@@ -9,6 +9,10 @@ clickstream (~3M records). We generate:
     uniformly random positions; duplicates resample the already-seen prefix
     uniformly, like the paper's finite-universe redraw);
   * ``zipf_stream`` — skewed key popularity (clickstream-like);
+  * ``zipf_range_stream`` — the same Zipf popularity with an ORDER-PRESERVING
+    key map, so the skew shows up as key-RANGE density (hot, densely
+    observed ids at the bottom of the uint32 space) — the adversarial input
+    for the elastic sharded router (DESIGN §4.4);
   * ``clickstream`` — sessionized zipf traffic with fraud-style duplicate
     bursts (the paper's §1 click-fraud application) for the examples.
 
@@ -65,6 +69,27 @@ def zipf_stream(n: int, universe: int, a: float = 1.3, seed: int = 0
     # map rank -> pseudo-random id so hot keys aren't numerically adjacent
     keys = ((ranks.astype(np.uint64) * 0x9E3779B9) & 0xFFFFFFFF).astype(
         np.uint32)
+    _, first = np.unique(keys, return_index=True)
+    truth = np.ones(n, bool)
+    truth[first] = False
+    return keys, truth
+
+
+def zipf_range_stream(n: int, universe: int, a: float = 1.2, seed: int = 0
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Zipf(a) stream whose key map PRESERVES rank order: rank r becomes
+    ``r * floor(2^32/universe)``, spreading the universe linearly over the
+    uint32 key space. Low ranks are both the hottest AND (in any finite
+    stream) the most densely *observed* ids, so contiguous key ranges carry
+    wildly uneven distinct-key load — exactly the skew a range-partitioned
+    router must rebalance (DESIGN §4.4). ``zipf_stream`` deliberately
+    scrambles this locality with a multiplicative hash; this generator
+    deliberately keeps it."""
+    rng = np.random.default_rng(seed)
+    ranks = np.minimum(rng.zipf(a, size=n), universe) - 1
+    stride = np.uint64((1 << 32) // universe)
+    keys = ((ranks.astype(np.uint64) * stride) & np.uint64(0xFFFFFFFF)
+            ).astype(np.uint32)
     _, first = np.unique(keys, return_index=True)
     truth = np.ones(n, bool)
     truth[first] = False

@@ -28,8 +28,30 @@ the beyond-paper distribution design (DESIGN.md §4):
     overflow counters accumulate device-side (read out lazily via
     ``dedup.metrics.StreamMetrics``).
 
-All version-sensitive jax surfaces (``shard_map``, the ambient mesh) go
-through ``repro.compat`` — never the raw API (pinned-jax policy, DESIGN §4).
+Two routing modes share the service (DESIGN §4.4):
+
+  * **Static hash routing** (default, ``cfg.rebalance_buckets == 0``): the
+    historical path above — an independent router hash balances the key
+    space in expectation, each shard is one filter.
+  * **Elastic key-range routing** (``cfg.rebalance_buckets = n_buckets``):
+    the uint32 key space splits into ``n_buckets`` contiguous ranges, each
+    range a self-contained sub-filter (own bits/position/load/rng/ring)
+    sized ``memory/n_buckets``; a replicated router table
+    (``FilterState.router``) maps buckets to shards. A per-batch load
+    monitor inside the cached scan watches the max/mean per-shard load
+    ratio; when it crosses ``cfg.rebalance_threshold`` the scan body
+    re-packs the table (greedy LPT, replicated + deterministic) and moves
+    whole bucket sub-filters between devices over a STATIC
+    ``collective_permute`` ring schedule gated by ``lax.cond``
+    (``distributed.sharding.rebalance_collect``). Every per-bucket
+    computation — probes, rng draws, positions, ring slots — travels with
+    its bucket, so a re-partition changes *placement, not math*: dup
+    verdicts are bit-identical to never having rebalanced, and to a
+    single-device oracle holding all buckets (tests/test_rebalance.py).
+
+All version-sensitive jax surfaces (``shard_map``, the ambient mesh,
+``ppermute``) go through ``repro.compat`` — never the raw API (pinned-jax
+policy, DESIGN §4).
 
 Exactness within a step: keys landing on their owner in the same step window
 are cross-deduplicated by the batched engine's intra-batch matching — the
@@ -52,8 +74,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .. import compat
 from ..core.batched import BatchResult, make_batched_step
 from ..core.config import DedupConfig
-from ..core.hashing import route_hash
-from ..core.state import FilterState, WindowRing, init_state
+from ..core.hashing import range_bucket, route_hash
+from ..core.state import (FilterState, RouterState, WindowRing, init_router,
+                          init_state)
+from ..distributed.sharding import rebalance_collect
+
+_INT32_MAX = np.iinfo(np.int32).max
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +94,16 @@ class ShardedDedupConfig:
         a key processed by two replicas would double-report."""
         return self.mesh_axes
 
+    @property
+    def elastic(self) -> bool:
+        """Elastic key-range routing with a dynamic router table (§4.4) —
+        selected by ``base.rebalance_buckets > 0``."""
+        return self.base.rebalance_buckets > 0
+
+    @property
+    def n_buckets(self) -> int:
+        return self.base.rebalance_buckets
+
     def n_shards(self, mesh: Mesh) -> int:
         return int(np.prod([mesh.shape[a] for a in self.mesh_axes]))
 
@@ -75,6 +111,15 @@ class ShardedDedupConfig:
         s = self.n_shards(mesh)
         c = math.ceil(local_batch / s * self.capacity_factor)
         return max(8, c)
+
+    def bucket_capacity(self, local_batch: int, mesh: Mesh) -> int:
+        """Per-bucket step width T of the elastic path: how many elements
+        ONE bucket can absorb per global batch. A function of the GLOBAL
+        batch and the bucket count only — deliberately independent of the
+        device count, so the per-bucket computation (and therefore every
+        dup verdict) is bit-identical across mesh sizes (§4.4)."""
+        g = local_batch * self.n_shards(mesh)
+        return max(8, math.ceil(g / self.n_buckets * self.capacity_factor))
 
 
 class ShardedDedup:
@@ -84,9 +129,20 @@ class ShardedDedup:
         self.scfg = scfg
         self.mesh = mesh
         self.n_shards = scfg.n_shards(mesh)
-        # per-shard filter: aggregate memory divided across shards
-        self.local_cfg = dataclasses.replace(
-            scfg.base, shards=self.n_shards).validate()
+        if scfg.elastic:
+            if scfg.n_buckets % self.n_shards:
+                raise ValueError(
+                    f"rebalance_buckets {scfg.n_buckets} must divide by the "
+                    f"mesh's shard count {self.n_shards} (DESIGN §4.4)")
+            self.b_r = scfg.n_buckets // self.n_shards   # bucket slots/shard
+            # per-BUCKET sub-filter: aggregate memory over all buckets
+            self.local_cfg = dataclasses.replace(
+                scfg.base, shards=scfg.n_buckets).validate()
+        else:
+            self.b_r = 0
+            # per-shard filter: aggregate memory divided across shards
+            self.local_cfg = dataclasses.replace(
+                scfg.base, shards=self.n_shards).validate()
         self._step = make_batched_step(self.local_cfg)
         self.axis = scfg.mesh_axes
         # jitted callables are built once per (kind, local_batch) and reused —
@@ -96,29 +152,34 @@ class ShardedDedup:
 
     def _state_template(self) -> FilterState:
         """Structure-only FilterState matching what this service carries —
-        including the swbf window ring (DESIGN §3.7), whose leaves need
-        PartitionSpecs like every other state field."""
+        including the swbf window ring (DESIGN §3.7) and the elastic router
+        table (§4.4), whose leaves need PartitionSpecs like every other
+        state field."""
         ring = (WindowRing(0, 0)
                 if self.local_cfg.variant == "swbf" else None)
-        return FilterState(0, 0, 0, 0, ring)
+        router = RouterState(0, 0) if self.scfg.elastic else None
+        return FilterState(0, 0, 0, 0, ring, router)
 
     # -------------------------------------------------------------- //
     def init(self, seed: int | None = None,
              event_capacity: int | None = None) -> FilterState:
-        """Filter state with a leading shard axis, sharded over mesh_axes.
+        """Filter state with a leading shard axis, sharded over mesh_axes
+        (elastic mode: a (n_shards, n_buckets/n_shards) grid of bucket
+        sub-filters plus the replicated router table, §4.4).
 
-        For swbf, each shard's ring slot must absorb one step's WHOLE
-        post-routing dispatch (n_shards · capacity elements — the flat
-        buffer the per-shard step deduplicates), not just the pre-routing
-        local batch. The default sizes the ring for ``run_stream`` /
-        ``make_step(base.batch_size // n_shards)``; driving ``make_step``
-        with a LARGER local batch needs a matching ``event_capacity`` here
-        (n_shards · capacity(local_batch) elements)."""
+        For swbf, each ring slot must absorb one step's WHOLE dispatch:
+        statically routed, that is the per-shard flat buffer (n_shards ·
+        capacity elements); elastically, the per-bucket step width
+        (``bucket_capacity``). The default sizes the ring for
+        ``run_stream`` / ``make_step(base.batch_size // n_shards)``;
+        driving ``make_step`` with a LARGER local batch needs a matching
+        ``event_capacity`` here."""
+        local_batch = max(1, self.scfg.base.batch_size // self.n_shards)
+        if self.scfg.elastic:
+            return self._init_elastic(seed, event_capacity, local_batch)
         kw = {}
         if self.local_cfg.variant == "swbf":
             if event_capacity is None:
-                local_batch = max(1,
-                                  self.scfg.base.batch_size // self.n_shards)
                 event_capacity = (
                     self.n_shards * self.scfg.capacity(local_batch, self.mesh))
             kw["event_capacity"] = event_capacity
@@ -138,6 +199,45 @@ class ShardedDedup:
         return jax.tree.map(
             lambda x: jax.device_put(x, NamedSharding(
                 self.mesh, P(self.axis, *([None] * (x.ndim - 1))))), state)
+
+    def _init_elastic(self, seed, event_capacity, local_batch) -> FilterState:
+        """Elastic state (§4.4): leaves carry (n_shards, b_r, ...) — one
+        self-contained sub-filter per bucket SLOT, the canonical block
+        assignment placing bucket ``g`` in slot ``(g // b_r, g % b_r)``.
+        Each bucket's rng is folded on its BUCKET id (not its shard), so the
+        randomness stream travels with the bucket through re-partitions.
+        The replicated router table rides as ``state.router``."""
+        n, b_r, nb = self.n_shards, self.b_r, self.scfg.n_buckets
+        kw = {}
+        if self.local_cfg.variant == "swbf":
+            if event_capacity is None:
+                event_capacity = self.scfg.bucket_capacity(
+                    local_batch, self.mesh)
+            kw["event_capacity"] = event_capacity
+        base = init_state(self.local_cfg, seed, **kw)
+
+        def stack(x):
+            return jnp.broadcast_to(x[None, None], (n, b_r, *x.shape))
+
+        bucket_ids = jnp.arange(nb, dtype=jnp.int32).reshape(n, b_r)
+        state = FilterState(
+            bits=stack(base.bits),
+            position=jnp.ones((n, b_r), jnp.int32),
+            load=stack(base.load),
+            rng=jax.vmap(jax.vmap(jax.random.fold_in, in_axes=(None, 0)),
+                         in_axes=(None, 0))(base.rng, bucket_ids),
+            ring=jax.tree.map(stack, base.ring),
+            router=init_router(nb, n),
+        )
+
+        def put(x, spec):
+            return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+        core = jax.tree.map(
+            lambda x: put(x, P(self.axis, *([None] * (x.ndim - 1)))),
+            state._replace(router=None))
+        router = jax.tree.map(lambda x: put(x, P()), state.router)
+        return core._replace(router=router)
 
     # -------------------------------------------------------------- //
     def _local_fn(self, cap: int):
@@ -186,16 +286,210 @@ class ShardedDedup:
 
         return local_fn
 
+    # ------------------------------------------------- elastic path (§4.4) //
+    def _axis_index(self):
+        """Linearized device index over the flattened mesh axes — the same
+        linearization ``all_to_all``/``ppermute`` use for tuple axis names."""
+        idx = jnp.int32(0)
+        for a in self.scfg.mesh_axes:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    @staticmethod
+    def _slot_tables(assign: jnp.ndarray, n_shards: int, b_r: int):
+        """Derive the two routing views of a bucket->shard assignment:
+        ``slot_of[g]`` — bucket g's slot index within its owner (rank among
+        same-owner buckets in bucket-id order), and ``slots[j, i]`` — the
+        bucket id shard j holds in slot i. Both replicated; O(n_buckets^2)
+        compares on a table of at most a few dozen entries."""
+        nb = assign.shape[0]
+        order = jnp.arange(nb, dtype=jnp.int32)
+        before = ((assign[None, :] == assign[:, None])
+                  & (order[None, :] < order[:, None]))
+        slot_of = before.sum(axis=1, dtype=jnp.int32)
+        slots = jnp.zeros((n_shards, b_r), jnp.int32).at[
+            assign, slot_of].set(order)
+        return slot_of, slots
+
+    @staticmethod
+    def _lpt_assign(bucket_load: jnp.ndarray, n_shards: int, b_r: int):
+        """Greedy longest-processing-time re-pack: buckets in descending
+        load order, each to the least-loaded shard with a free slot (every
+        shard keeps EXACTLY b_r buckets — the state layout is a fixed
+        (n_shards, b_r) grid). Pure function of the replicated load vector,
+        stable sort + lowest-index argmin tie-breaks: every device computes
+        the identical table."""
+        nb = bucket_load.shape[0]
+        order_desc = jnp.argsort(-bucket_load).astype(jnp.int32)
+
+        def body(carry, g):
+            sload, scount = carry
+            cost = jnp.where(scount >= b_r, _INT32_MAX, sload)
+            j = jnp.argmin(cost).astype(jnp.int32)
+            return ((sload.at[j].add(bucket_load[g]), scount.at[j].add(1)),
+                    j)
+
+        zeros = jnp.zeros((n_shards,), jnp.int32)
+        _, owners = jax.lax.scan(body, (zeros, zeros), order_desc)
+        return jnp.zeros((nb,), jnp.int32).at[order_desc].set(owners)
+
+    def _elastic_local_fn(self, local_batch: int):
+        """Per-device body of the elastic path: range-route -> per-bucket
+        dispatch -> tag-ordered compaction -> one batched step per local
+        bucket slot -> verdicts home -> load monitor (+ cond-gated bucket
+        permute). The per-bucket work stream (keys in stream order, widths,
+        rng) is invariant to bucket placement AND device count — the §4.4
+        bit-parity contract."""
+        n_shards, b_r, nb = self.n_shards, self.b_r, self.scfg.n_buckets
+        step = self._step
+        t_width = self.scfg.bucket_capacity(local_batch, self.mesh)
+        cap = -(-t_width // n_shards)        # per (bucket, source) window
+        all_axes = self.scfg.mesh_axes
+        threshold = float(self.scfg.base.rebalance_threshold)
+        rows_e = jnp.arange(b_r, dtype=jnp.int32)[:, None]
+        order = jnp.arange(nb, dtype=jnp.int32)
+
+        def local_fn(state: FilterState, keys: jnp.ndarray,
+                     valid: jnp.ndarray):
+            router = state.router
+            bstate = jax.tree.map(lambda x: x[0], state._replace(router=None))
+            assign = router.assign                           # (nb,) replicated
+            slot_of, slots = self._slot_tables(assign, n_shards, b_r)
+            me = self._axis_index()
+            b = keys.shape[0]
+
+            # ---- route + per-(bucket, source) compaction ---------------- //
+            bucket = range_bucket(keys, nb)                  # (b,)
+            onehot = valid[:, None] & (bucket[:, None] == order[None, :])
+            pos_in = jnp.cumsum(onehot, axis=0) - 1          # (b, nb)
+            my_pos = jnp.take_along_axis(
+                pos_in, bucket[:, None], axis=1)[:, 0]       # (b,)
+            keep = valid & (my_pos < cap)
+            src_overflow = jnp.sum(valid & ~keep)
+            dest = assign[bucket]
+            tag = me * b + jnp.arange(b, dtype=jnp.int32)    # global batch pos
+            o = jnp.where(keep, dest, n_shards)              # drop overflow
+            sl = jnp.where(keep, slot_of[bucket], 0)
+            p = jnp.where(keep, my_pos, 0)
+            send_keys = jnp.zeros((n_shards, b_r, cap), jnp.uint32
+                                  ).at[o, sl, p].set(keys, mode="drop")
+            send_tags = jnp.full((n_shards, b_r, cap), _INT32_MAX, jnp.int32
+                                 ).at[o, sl, p].set(tag, mode="drop")
+            send_valid = jnp.zeros((n_shards, b_r, cap), bool
+                                   ).at[o, sl, p].set(True, mode="drop")
+
+            def a2a(x):
+                flat = x.reshape(n_shards, -1)
+                out = jax.lax.all_to_all(flat, all_axes, split_axis=0,
+                                         concat_axis=0, tiled=True)
+                return out.reshape(n_shards, b_r, cap)
+
+            recv_keys, recv_tags, recv_valid = (
+                a2a(send_keys), a2a(send_tags), a2a(send_valid))
+
+            # ---- stream-order compaction to the fixed step width T ------ //
+            # (b_r, E): slot-major view of everything I own this step
+            rk = recv_keys.transpose(1, 0, 2).reshape(b_r, -1)
+            rt = jnp.where(recv_valid, recv_tags, _INT32_MAX
+                           ).transpose(1, 0, 2).reshape(b_r, -1)
+            rv = recv_valid.transpose(1, 0, 2).reshape(b_r, -1)
+            stags = jnp.sort(rt, axis=-1)                    # value-free sort
+            rank = jax.vmap(
+                lambda s, t: jnp.searchsorted(s, t, side="left"))(
+                    stags, rt).astype(jnp.int32)
+            ok = rv & (rank < t_width)
+            rank_overflow = jnp.sum(rv & ~ok)
+            tgt = jnp.where(ok, rank, t_width)
+            ck = jnp.zeros((b_r, t_width), jnp.uint32
+                           ).at[rows_e, tgt].set(rk, mode="drop")
+            n_val = jnp.minimum(jnp.sum(ok, axis=-1), t_width)
+            cvalid = (jnp.arange(t_width, dtype=jnp.int32)[None, :]
+                      < n_val[:, None])
+
+            # ---- one batched step per local bucket slot ----------------- //
+            # lax.scan over the stacked slot axis, not a python unroll:
+            # buckets are independent and homogeneous, so ONE compiled body
+            # serves every slot — trace/compile size stays O(1) in b_r
+            # (the 1-device oracle carries b_r == n_buckets)
+            def slot_body(_, xs):
+                st_i, kk, vv = xs
+                st_i, res = step(st_i, kk, vv)
+                return _, (st_i, res.dup)
+
+            _, (new_bstate, dup_c) = jax.lax.scan(
+                slot_body, 0, (bstate, ck, cvalid))          # dup_c (b_r, T)
+
+            # ---- verdicts home ------------------------------------------ //
+            dup_recv = (jnp.take_along_axis(
+                dup_c, jnp.minimum(rank, t_width - 1), axis=-1) & ok)
+            back = dup_recv.reshape(b_r, n_shards, cap).transpose(1, 0, 2)
+            back = jax.lax.all_to_all(
+                back.reshape(n_shards, -1), all_axes, split_axis=0,
+                concat_axis=0, tiled=True).reshape(n_shards, b_r, cap)
+            dup = back[o.clip(0, n_shards - 1), sl, p] & keep
+
+            # ---- load monitor + cond-gated re-partition (§4.4) ---------- //
+            my_ids = slots[me]                               # (b_r,)
+            if threshold > 0.0:
+                slot_load = new_bstate.load.sum(axis=-1)     # (b_r,)
+                contrib = jnp.zeros((nb,), jnp.int32).at[my_ids].set(slot_load)
+                bucket_load = jax.lax.psum(contrib, all_axes)
+                shard_load = jnp.zeros((n_shards,), jnp.int32
+                                       ).at[assign].add(bucket_load)
+                total = shard_load.sum()
+                ratio = (shard_load.max().astype(jnp.float32) * n_shards
+                         / jnp.maximum(total, 1).astype(jnp.float32))
+                repacked = self._lpt_assign(bucket_load, n_shards, b_r)
+                # fire only when the re-pack STRICTLY lowers the max shard
+                # load — a skew the packing cannot improve (e.g. one bucket
+                # per shard, where any re-pack is a pure permutation) must
+                # not permute state in place every batch
+                repacked_load = jnp.zeros((n_shards,), jnp.int32
+                                          ).at[repacked].add(bucket_load)
+                trigger = ((ratio > threshold) & (total > 0)
+                           & (repacked_load.max() < shard_load.max()))
+                new_assign = jnp.where(trigger, repacked, assign)
+                _, new_slots = self._slot_tables(new_assign, n_shards, b_r)
+                want = new_slots[me]                         # (b_r,)
+                new_bstate = jax.lax.cond(
+                    trigger,
+                    lambda t: rebalance_collect(t, my_ids, want, all_axes,
+                                                n_shards),
+                    lambda t: t,
+                    new_bstate)
+                router = RouterState(
+                    assign=new_assign,
+                    n_rebalances=router.n_rebalances
+                    + trigger.astype(jnp.int32))
+
+            out = jax.tree.map(lambda x: x[None], new_bstate)
+            out = out._replace(router=router)
+            overflow = (src_overflow + rank_overflow)[None].astype(jnp.int32)
+            return out, dup, overflow
+
+        return local_fn
+
     def _shard_mapped(self, local_batch: int):
         """The shard-mapped (state, keys, valid) -> (state, dup, ovf) body;
         ``keys`` is the *global* batch sharded over batch_axes, state carries
-        the leading shard axis sharded over mesh_axes."""
-        cap = self.scfg.capacity(local_batch, self.mesh)
-        state_spec = jax.tree.map(
-            lambda _: P(self.axis), self._state_template())
+        the leading shard axis sharded over mesh_axes (the elastic router
+        table is replicated — every device must route identically)."""
+        t = self._state_template()
+
+        def sub(subtree, spec):
+            return jax.tree.map(lambda _: spec, subtree)
+
+        state_spec = FilterState(
+            bits=P(self.axis), position=P(self.axis), load=P(self.axis),
+            rng=P(self.axis), ring=sub(t.ring, P(self.axis)),
+            router=sub(t.router, P()))
         batch_spec = P(self.scfg.batch_axes)
+        if self.scfg.elastic:
+            body = self._elastic_local_fn(local_batch)
+        else:
+            body = self._local_fn(self.scfg.capacity(local_batch, self.mesh))
         return compat.shard_map(
-            self._local_fn(cap), mesh=self.mesh,
+            body, mesh=self.mesh,
             in_specs=(state_spec, batch_spec, batch_spec),
             out_specs=(state_spec, batch_spec, P(self.axis)),
             check_vma=False)

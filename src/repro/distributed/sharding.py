@@ -1,4 +1,6 @@
-"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs.
+"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs —
+plus the elastic-rebalance permute schedule (DESIGN §4.4) used by the
+sharded dedup path to move router buckets between devices.
 
 Mesh: (pod, data, model) multi-pod or (data, model) single-pod. The batch
 shards over ("pod","data"); tensor-parallel dims over "model"; FSDP (when
@@ -20,6 +22,7 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -43,6 +46,58 @@ def _pick(mesh: Mesh, dim: int, prefs: Sequence):
         if dim % axis_size(mesh, a) == 0 and axis_size(mesh, a) > 1:
             return a
     return None
+
+
+# ------------------------------------------- elastic rebalance permute --- //
+
+def ring_schedule(n_shards: int):
+    """The static one-step ring rotation over ``n_shards`` devices:
+    device i sends to i+1 (mod n). ``compat.ppermute`` compiles a FIXED
+    permutation; the rebalance's *dynamic* re-partition is built by driving
+    the whole state around this ring ``n_shards - 1`` times and letting each
+    device keep what the new router table says it owns (DESIGN §4.4) —
+    data-dependent selection over a data-independent schedule."""
+    return [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+
+def rebalance_collect(tree, slot_ids, want_ids, axis_names, n_shards: int):
+    """Collect, for each local bucket slot, the state of the bucket the new
+    router assignment places there — from whichever device currently holds
+    it. Runs INSIDE a shard_map body.
+
+    ``tree``: pytree of per-slot leaves, leading axis = local slots (B_r).
+    ``slot_ids``: (B_r,) int32 — bucket id currently held in each local slot.
+    ``want_ids``: (B_r,) int32 — bucket id each local slot must hold after
+    the re-partition (derived from the replicated new assignment, so every
+    device computes a consistent global permutation).
+
+    Rotation r visits shard ``me - r`` (mod n)'s original slots; a bucket id
+    appears on exactly one device, so after the own-slab pass plus
+    ``n_shards - 1`` rotations every wanted slot has been filled exactly
+    once. Cost: (n_shards - 1) ppermutes of the local state — paid only when
+    the load trigger fires (the caller gates this under ``lax.cond``).
+    """
+    from .. import compat
+
+    def take(acc, visiting, ids):
+        hit = want_ids[:, None] == ids[None, :]          # (B_r, B_r)
+        found = hit.any(axis=1)
+        idx = jnp.argmax(hit, axis=1)
+
+        def leaf(a, v):
+            cand = jnp.take(v, idx, axis=0)
+            mask = found.reshape((-1,) + (1,) * (cand.ndim - 1))
+            return jnp.where(mask, cand, a)
+
+        return jax.tree.map(leaf, acc, visiting)
+
+    acc = take(tree, tree, slot_ids)                     # own slab first
+    rotating, ids = tree, slot_ids
+    perm = ring_schedule(n_shards)
+    for _ in range(n_shards - 1):
+        rotating, ids = compat.ppermute((rotating, ids), axis_names, perm)
+        acc = take(acc, rotating, ids)
+    return acc
 
 
 # --------------------------------------------------------- transformer --- //

@@ -6,6 +6,15 @@ first, and only executes the model for distinct requests — duplicates are
 answered from the response cache. This is "Intelligent Compression" on the
 serving path: the Bloom-filter verdict costs O(k) word probes vs. a full
 forward pass.
+
+Contract (DESIGN.md §5): the session owns one ``Dedup`` engine and threads
+its ``FilterState`` across calls (state layout per DESIGN.md §3.6 — the
+session never inspects it); the response cache is probed BEFORE the Bloom
+verdict, so a false-negative duplicate can never recompute a cached
+response, and eviction is FIFO so a full cache keeps admitting new
+entries. Scoring functions are pluggable (LM prefill/decode below, or any
+``keys -> values`` callable); `tests/test_pipeline_serving.py` pins the
+cache-first and FIFO behaviours.
 """
 
 from __future__ import annotations
