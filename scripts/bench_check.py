@@ -38,6 +38,18 @@ windowed-dedup acceptance bar (DESIGN §3.7): at the paper-scale row
 reference's elems/s, with the one-dispatch stream contract intact
 (stream_cache == 1).
 
+``--serving`` validates the committed BENCH_serving.json (emitted by
+``python -m benchmarks.serving_qps``) against the DESIGN §5.2 acceptance
+bar, per scorer (trivial and transformer): the dynamic-batching front-end
+must sustain >= 2x the per-request ``ServeSession`` loop's QPS, the
+latency percentiles must be sane (0 < p50 <= p99), the shed rate must be
+a reported fraction in [0, 1), the compiled-trace count must respect the
+bucket contract (<= one trace per bucket per donation flag), and the
+verdict-parity digest must prove the async front-end returned
+bit-identical dedup verdicts to the synchronous replay of the same
+admitted schedule. QPS trajectory vs the frozen baseline is checked at
+the sharded tolerance (async wall-clock on a shared CPU jitters).
+
 ``--rebalance`` validates the committed BENCH_rebalance.json (emitted by
 ``python -m benchmarks.sharded_scaling --rebalance``) against the DESIGN
 §4.4 acceptance bar, per backend (jnp and pallas): the monitor fired
@@ -204,6 +216,60 @@ def check_rebalance() -> int:
     return 1 if fail else 0
 
 
+def check_serving(tol: float) -> int:
+    """BENCH_serving.json: the DESIGN §5.2 acceptance bar — >= 2x sustained
+    QPS over the per-request loop, sane latency percentiles, a reported
+    shed rate, the bucket no-retrace contract, and the verdict-parity
+    digest (async front-end == synchronous replay of the same admitted
+    schedule). Validates the COMMITTED file only; nothing re-measured."""
+    from benchmarks.serving_qps import (BENCH_PATH as SERVING_PATH, BUCKETS,
+                                        GATE_SPEEDUP)
+
+    if not os.path.exists(SERVING_PATH):
+        print(f"bench_check: no committed artifact at {SERVING_PATH} — run "
+              f"`python -m benchmarks.serving_qps --fast` first")
+        return 2
+    with open(SERVING_PATH) as f:
+        doc = json.load(f)
+    baseline, current = doc.get("baseline", {}), doc.get("current", {})
+    fail = False
+    for scorer in ("trivial", "transformer"):
+        rec = current.get(scorer, {})
+        fe = rec.get("frontend", {})
+        if "qps" not in fe or "qps" not in rec.get("per_request", {}):
+            print(f"serving {scorer:12s}: MISSING   REGRESSION")
+            fail = True
+            continue
+        problems = []
+        if rec["speedup"] < GATE_SPEEDUP:
+            problems.append(f"speedup {rec['speedup']:.2f}x < "
+                            f"{GATE_SPEEDUP:.0f}x")
+        if not (0 < fe["p50_ms"] <= fe["p99_ms"]):
+            problems.append(f"latency percentiles insane "
+                            f"(p50={fe['p50_ms']}, p99={fe['p99_ms']})")
+        if not (0 <= fe["shed_rate"] < 1):
+            problems.append(f"shed_rate {fe['shed_rate']} not in [0, 1)")
+        # one trace per bucket per donation flag (plain + donated jit)
+        if fe.get("process_cache", 0) > 2 * len(BUCKETS):
+            problems.append(f"process_cache {fe['process_cache']} > "
+                            f"{2 * len(BUCKETS)} — bucket contract broken")
+        if not rec.get("parity"):
+            problems.append("verdict digest != synchronous replay")
+        ref = baseline.get(scorer, {}).get("frontend", {}).get("qps")
+        if ref and fe["qps"] < (1.0 - tol) * ref:
+            problems.append(f"qps {fe['qps']:.0f} < (1-{tol}) * "
+                            f"baseline {ref:.0f}")
+        status = ("  REGRESSION(" + "; ".join(problems) + ")" if problems
+                  else "ok")
+        print(f"serving {scorer:12s}: {fe['qps']:9.0f} qps "
+              f"({rec['speedup']:6.2f}x vs per-request "
+              f"{rec['per_request']['qps']:.0f}), p50 {fe['p50_ms']:.2f}ms "
+              f"p99 {fe['p99_ms']:.2f}ms, shed {fe['shed_rate']:.3f}, "
+              f"parity={rec.get('parity')}   {status}")
+        fail = fail or bool(problems)
+    return 1 if fail else 0
+
+
 def check_counter(tol: float) -> int:
     """BENCH_counter.json: trajectory + the DESIGN §3.6 acceptance bar —
     plane-layout SBF >= 2x dense8 SBF elems/s at the paper-scale row."""
@@ -246,9 +312,16 @@ def main(argv=None) -> int:
                     help="validate BENCH_rebalance.json (elastic rebalance "
                          "load-spread reduction + on/off/oracle verdict "
                          "parity, DESIGN §4.4)")
+    ap.add_argument("--serving", action="store_true",
+                    help="validate BENCH_serving.json (dynamic-batching "
+                         "front-end >= 2x per-request QPS, latency/shed "
+                         "sanity, bucket no-retrace contract, verdict-"
+                         "parity digest, DESIGN §5.2)")
     args = ap.parse_args(argv)
     if args.rebalance:
         return check_rebalance()
+    if args.serving:
+        return check_serving(0.35 if args.tol is None else args.tol)
     if args.sharded:
         return check_sharded(0.35 if args.tol is None else args.tol)
     if args.counter:

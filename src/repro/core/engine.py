@@ -37,6 +37,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..compat import jit_cache_size
 from .batched import BatchResult, make_batched_step
@@ -45,11 +46,17 @@ from .state import FilterState, init_state
 from .variants import make_scan_step
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
 class Dedup:
     def __init__(self, cfg: DedupConfig):
         self.cfg = cfg.validate()
         self._step = make_batched_step(cfg)
         self._batched = jax.jit(self._step)
+        self._batched_donated = jax.jit(self._step, donate_argnums=0)
         if cfg.effective_layout == "dense8":
             self._scan_step = make_scan_step(cfg)
         self._stream = jax.jit(self._stream_impl, donate_argnums=0)
@@ -79,6 +86,58 @@ class Dedup:
         if valid is None:
             valid = jnp.ones(keys.shape, dtype=bool)
         return self._batched(state, keys.astype(jnp.uint32), valid)
+
+    def process_padded(self, state: FilterState, keys,
+                       valid=None, *, width: int | None = None,
+                       donate: bool = False
+                       ) -> Tuple[FilterState, BatchResult]:
+        """Shape-stable ``process``: pad ``(keys, valid)`` with invalid
+        lanes up to ``width`` so EVERY ragged request length reuses one
+        compiled trace per distinct width (the serving front-end's batch
+        buckets, DESIGN.md §5.2) instead of re-tracing the jitted step per
+        length. Invalid lanes are never routed, inserted, or counted
+        (DESIGN.md §2 valid-mask semantics); the returned ``BatchResult``
+        is sliced back to the request length.
+
+        ``width`` defaults to ``max(cfg.batch_size, next_pow2(n))``.
+        ``donate=True`` routes through a state-donating jit so the filter
+        buffer is aliased in place (the front-end threads its state and
+        never reuses the argument); the passed ``state`` is invalidated.
+
+        Note the determinism contract: the per-step randomness is drawn at
+        the PADDED width, so verdicts are reproducible per (schedule,
+        width) — replaying the same batches at the same widths is
+        bit-identical, re-bucketing is not (DESIGN.md §5.2).
+        """
+        n = int(keys.shape[0])
+        if width is None:
+            width = max(self.cfg.batch_size, next_pow2(n))
+        if n > width:
+            raise ValueError(f"batch of {n} exceeds pad width {width}")
+        xp = np if isinstance(keys, np.ndarray) else jnp
+        keys_p = xp.pad(keys.astype(xp.uint32), (0, width - n))
+        if valid is None:
+            valid = xp.ones((n,), bool)
+        valid_p = xp.pad(xp.asarray(valid, dtype=bool), (0, width - n))
+        if state.ring is not None:
+            cap = state.ring.events.shape[-1] // self.cfg.k
+            if width > cap:
+                raise ValueError(
+                    f"pad width {width} exceeds the state ring's event "
+                    f"capacity {cap} — init the state with "
+                    f"event_capacity >= the widest bucket (DESIGN §3.7)")
+        fn = self._batched_donated if donate else self._batched
+        state, res = fn(state, jnp.asarray(keys_p), jnp.asarray(valid_p))
+        if width != n:
+            res = BatchResult(*(x[:n] for x in res))
+        return state, res
+
+    def process_cache_size(self) -> int:
+        """Compiled specializations of the batched step (one per distinct
+        padded width × donation flag) — the no-recompile regression probe
+        for the serving front-end's bucket contract (DESIGN.md §5.2)."""
+        return (jit_cache_size(self._batched)
+                + jit_cache_size(self._batched_donated))
 
     # ------------------------------------------------------------------ //
     def _stream_impl(self, state: FilterState, kb: jnp.ndarray,

@@ -7,28 +7,32 @@ answered from the response cache. This is "Intelligent Compression" on the
 serving path: the Bloom-filter verdict costs O(k) word probes vs. a full
 forward pass.
 
-Contract (DESIGN.md §5): the session owns one ``Dedup`` engine and threads
-its ``FilterState`` across calls (state layout per DESIGN.md §3.6 — the
-session never inspects it); the response cache is probed BEFORE the Bloom
-verdict, so a false-negative duplicate can never recompute a cached
-response, and eviction is FIFO so a full cache keeps admitting new
-entries. Scoring functions are pluggable (LM prefill/decode below, or any
-``keys -> values`` callable); `tests/test_pipeline_serving.py` pins the
-cache-first and FIFO behaviours.
+Contract (DESIGN.md §5): the session delegates to the shared
+``MicroBatchExecutor`` (repro.serve.frontend) — request keys are padded to
+one of a small set of fixed batch buckets so ragged request lengths never
+re-trace the jitted engine, the response cache is probed in ONE vectorized
+pass BEFORE the Bloom verdict gates anything (a false-negative duplicate
+can never recompute a cached response), and eviction is FIFO by default
+(``cache_policy="lru"`` keeps hot keys alive under zipf traffic — see
+repro.serve.cache). Scoring functions are pluggable (LM prefill/decode
+below, or any ``keys -> values`` callable); concurrent multi-client
+traffic goes through the async ``ServeFrontend`` instead, which coalesces
+requests into the same micro-batch core (DESIGN.md §5.2).
+`tests/test_pipeline_serving.py` pins the cache-first and FIFO/LRU
+behaviours; `tests/test_serving_frontend.py` pins the no-retrace bucket
+contract.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.config import DedupConfig
-from ..core.engine import Dedup
 from ..models import transformer as tfm
+from .frontend import DEFAULT_BUCKETS, MicroBatchExecutor
 
 
 def make_prefill_step(cfg: tfm.TransformerConfig):
@@ -45,65 +49,64 @@ def make_decode_step(cfg: tfm.TransformerConfig):
 
 @dataclasses.dataclass
 class ServeSession:
-    """Request-level dedup in front of any scoring function.
+    """Synchronous request-level dedup in front of any scoring function.
+
+    One caller, one batch per ``serve`` call — the single-tenant shape.
+    The batch work itself (padding to a bucket, verdicts, the vectorized
+    cache probe, scoring the misses) is the same ``MicroBatchExecutor``
+    core the async ``ServeFrontend`` coalesces concurrent clients into;
+    this class only adapts it to a blocking call-and-return API.
 
     The response cache is authoritative and probed FIRST for every request:
     the Bloom verdict is probabilistic in both directions, and gating the
     cache lookup on it would turn a false-NEGATIVE duplicate into a full
     recompute despite a cached response sitting right there. The verdict
     still drives what the filter learns (and the duplicate-traffic stats);
-    the cache is FIFO-bounded at ``cache_size`` entries so long-running
-    sessions keep admitting new responses instead of freezing the first
-    ``cache_size`` keys forever.
+    the cache is bounded at ``cache_size`` entries — FIFO by default, LRU
+    with ``cache_policy="lru"`` (batch-granular recency).
     """
 
     dedup_cfg: DedupConfig
     score_fn: Callable[[dict], np.ndarray]     # batch -> responses
     cache_size: int = 65536
+    cache_policy: str = "fifo"                 # "fifo" | "lru"
+    buckets: Sequence[int] = DEFAULT_BUCKETS   # fixed padded widths
 
     def __post_init__(self):
-        self.engine = Dedup(self.dedup_cfg)
-        self.state = self.engine.init()
-        # insertion-ordered dict == FIFO queue: evict via next(iter(...))
-        self.cache: dict[int, np.ndarray] = {}
-        self.n_served = 0
-        self.n_cached = 0
-        self.n_flagged_dup = 0
-
-    def _admit(self, key: int, value: np.ndarray) -> None:
-        """FIFO-bounded insert: evict the oldest entry once full (never when
-        merely refreshing an existing key's response). cache_size <= 0
-        disables caching entirely."""
-        if self.cache_size <= 0:
-            return
-        if key not in self.cache and len(self.cache) >= self.cache_size:
-            self.cache.pop(next(iter(self.cache)))
-        self.cache[key] = value
+        self._exec = MicroBatchExecutor(
+            self.dedup_cfg, self.score_fn, buckets=self.buckets,
+            cache_size=self.cache_size, cache_policy=self.cache_policy)
 
     def serve(self, batch: dict) -> np.ndarray:
-        keys = np.asarray(batch["key"], dtype=np.uint32)
-        self.state, res = self.engine.process(self.state, jnp.asarray(keys))
-        self.n_flagged_dup += int(np.asarray(res.dup).sum())
-        out: list[Optional[np.ndarray]] = [None] * len(keys)
-        # cache first, verdict second: a cached response answers the request
-        # whatever the (probabilistic) Bloom verdict says; a cache miss —
-        # duplicate or not — falls through to compute
-        need = []
-        for i, k in enumerate(keys):
-            hit = self.cache.get(int(k))
-            if hit is not None:
-                out[i] = hit
-                self.n_cached += 1
-            else:
-                need.append(i)
-        if need:
-            sub = {f: np.asarray(v)[need] for f, v in batch.items()}
-            scores = np.asarray(self.score_fn(sub))
-            for j, i in enumerate(need):
-                out[i] = scores[j]
-                self._admit(int(keys[i]), scores[j])
-            self.n_served += len(need)
-        return np.stack(out)
+        # score_fn is a mutable dataclass field (tests swap it mid-session)
+        self._exec.score_fn = self.score_fn
+        vals, _dup, _hit = self._exec.run(batch)
+        return np.stack(list(vals))
+
+    # ------------------------------------------------ delegated surface //
+    @property
+    def engine(self):
+        return self._exec.engine
+
+    @property
+    def state(self):
+        return self._exec.state
+
+    @property
+    def cache(self):
+        return self._exec.cache
+
+    @property
+    def n_served(self) -> int:
+        return self._exec.n_scored
+
+    @property
+    def n_cached(self) -> int:
+        return self._exec.n_cached
+
+    @property
+    def n_flagged_dup(self) -> int:
+        return self._exec.n_dup
 
     @property
     def hit_rate(self) -> float:

@@ -2,8 +2,11 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.checkpoint.manager import CheckpointManager, _flatten
 from repro.core import DedupConfig
+from repro.core.state import init_router
 from repro.data.streams import (clickstream, controlled_distinct_stream,
                                 key_collision_count, pair_truth, zipf_stream)
 from repro.dedup import DedupPipeline, StreamMetrics, truth_from_stream
@@ -161,6 +164,97 @@ def test_clickstream_truth_derived_from_pairs_not_hashed_keys():
     truth2 = pair_truth(users, items)
     assert not truth2.any()                       # distinct clicks — no dup
     assert key_collision_count(users, items, key) == 1
+
+
+def test_serve_cache_lru_beats_fifo_on_zipf():
+    """``cache_policy="lru"``: on a zipf stream whose working set exceeds
+    the cache, batch-granular LRU must hold the hot head at a hit rate >=
+    FIFO's (which cycles hot keys out); the default policy stays FIFO and
+    its semantics are pinned by the regressions above."""
+    keys, _ = zipf_stream(20_000, universe=4_000, a=1.2, seed=5)
+    rate = {}
+    for policy in ("fifo", "lru"):
+        sess = ServeSession(_cfg(batch_size=64),
+                            lambda b: np.asarray(b["key"], np.float64),
+                            cache_size=256, cache_policy=policy)
+        for i in range(0, len(keys), 64):
+            sess.serve({"key": keys[i:i + 64]})
+        assert len(sess.cache) <= 256              # bound respected
+        rate[policy] = sess.hit_rate
+    assert rate["lru"] >= rate["fifo"] > 0
+    default = ServeSession(_cfg(batch_size=64),
+                           lambda b: np.asarray(b["key"], np.float64))
+    assert default._exec.cache.policy == "fifo"    # knob defaults unchanged
+
+
+# ------------------------------------------------ checkpoint round-tripping //
+@pytest.mark.parametrize("variant,kw", [
+    ("rlbsbf", dict(packed=True)),
+    ("rlbsbf", dict(packed=True, backend="pallas")),
+    ("swbf", dict(window=4)),
+    ("swbf", dict(window=4, backend="pallas")),
+], ids=["rlbsbf-jnp", "rlbsbf-pallas", "swbf-jnp", "swbf-pallas"])
+def test_pipeline_state_dict_roundtrip_midstream(tmp_path, variant, kw):
+    """``state_dict``/``load_state_dict`` round-trip MID-STREAM through the
+    on-disk CheckpointManager: a fresh pipeline restored from the
+    checkpoint must produce bit-identical dup verdicts for the rest of the
+    stream (and end in a bit-identical state — bits, position, load, rng,
+    and the swbf event ring) on both the jnp and pallas backends."""
+    cfg = DedupConfig.for_variant(variant, memory_bits=1 << 14,
+                                  batch_size=256, **kw)
+    keys, _ = zipf_stream(256 * 8, universe=600, seed=9)
+    half = 256 * 4
+
+    pipe = DedupPipeline(cfg, mode="flag")
+    for i in range(0, half, 256):
+        pipe.process({"key": jnp.asarray(keys[i:i + 256])})
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, pipe.state_dict())
+
+    dup_a = [np.asarray(pipe.process(
+        {"key": jnp.asarray(keys[i:i + 256])}).dup)
+        for i in range(half, len(keys), 256)]
+
+    pipe_b = DedupPipeline(cfg, mode="flag")   # fresh engine + fresh state
+    pipe_b.load_state_dict(mgr.restore(4, pipe_b.state_dict()))
+    assert int(pipe_b.state.position) == half + 1  # stream position resumed
+    if variant == "swbf":
+        assert pipe_b.state.ring is not None       # ring leaf round-tripped
+    dup_b = [np.asarray(pipe_b.process(
+        {"key": jnp.asarray(keys[i:i + 256])}).dup)
+        for i in range(half, len(keys), 256)]
+
+    assert all(np.array_equal(a, b) for a, b in zip(dup_a, dup_b))
+    fa, fb = _flatten(pipe.state_dict()), _flatten(pipe_b.state_dict())
+    assert fa.keys() == fb.keys()
+    for leaf in fa:
+        assert np.array_equal(fa[leaf], fb[leaf]), leaf
+
+
+def test_router_leaf_survives_state_dict_roundtrip(tmp_path):
+    """The elastic router table (DESIGN §4.4) is a ``FilterState`` leaf and
+    must ride ``state_dict``/checkpoint round-trips bit-exactly. (Only the
+    sharded elastic path *threads* the router through steps; this pins the
+    serialization layer — a restored router must reproduce the exact
+    assignment and rebalance count, not the canonical initial table.)"""
+    pipe = DedupPipeline(_cfg(), mode="flag")
+    pipe.process({"key": jnp.asarray(np.arange(1024, dtype=np.uint32))})
+    router = init_router(16, 4)
+    router = router._replace(                      # a post-rebalance table
+        assign=router.assign.at[3].set(2),
+        n_rebalances=jnp.asarray(5, jnp.int32))
+    pipe.state = pipe.state._replace(router=router)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, pipe.state_dict())
+
+    pipe_b = DedupPipeline(_cfg(), mode="flag")
+    pipe_b.state = pipe_b.state._replace(router=init_router(16, 4))
+    pipe_b.load_state_dict(mgr.restore(1, pipe_b.state_dict()))
+    r = pipe_b.state.router
+    assert np.array_equal(np.asarray(r.assign), np.asarray(router.assign))
+    assert int(r.n_rebalances) == 5
+    assert np.array_equal(np.asarray(pipe_b.state.bits),
+                          np.asarray(pipe.state.bits))
 
 
 def test_stream_metrics_clock_starts_at_first_update(monkeypatch):

@@ -1,0 +1,299 @@
+"""Dynamic-batching serving front-end (DESIGN.md §5.2): bucket no-retrace
+contract, pad-content invariance, coalescing, backpressure, flush behaviour,
+and the schedule-replay verdict-parity proof."""
+
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DedupConfig
+from repro.core.engine import Dedup
+from repro.serve import (DEFAULT_BUCKETS, MicroBatchExecutor, ResponseCache,
+                         ServeFrontend, ServeSession, VERDICT_OK,
+                         VERDICT_RETRY, replay_schedule, verdict_digest)
+
+
+def _cfg(**kw):
+    kw.setdefault("memory_bits", 1 << 16)
+    kw.setdefault("batch_size", 64)
+    return DedupConfig.for_variant("rlbsbf", **kw)
+
+
+def _double(batch):
+    return np.asarray(batch["key"], np.float64) * 2.0
+
+
+# ------------------------------------------------------- padded engine step //
+def test_process_padded_invalid_lanes_never_inserted():
+    """Pad-content invariance: the padded step at width W must produce the
+    same verdicts AND the same filter bits as a full-width step whose pad
+    lanes carry arbitrary keys under valid=False — invalid lanes are never
+    routed, inserted, or counted (DESIGN.md §2 valid-mask semantics)."""
+    eng = Dedup(_cfg())
+    keys = np.array([3, 1, 4, 1, 5], np.uint32)
+    st_a, res_a = eng.process_padded(eng.init(), keys, width=64)
+    # same step, hand-padded with GARBAGE keys in the invalid lanes
+    junk = np.full(64, 0xDEADBEEF, np.uint32)
+    junk[:5] = keys
+    valid = np.zeros(64, bool)
+    valid[:5] = True
+    st_b, res_b = eng.process(eng.init(), jnp.asarray(junk),
+                              jnp.asarray(valid))
+    assert np.array_equal(np.asarray(res_a.dup), np.asarray(res_b.dup)[:5])
+    assert np.array_equal(np.asarray(st_a.bits), np.asarray(st_b.bits))
+    assert int(st_a.position) == int(st_b.position)
+    assert res_a.dup.shape == (5,)                 # sliced back to request n
+    assert bool(np.asarray(res_a.dup)[3])          # intra-batch replay of 1
+
+
+def test_process_padded_rejects_overflow_and_checks_ring_capacity():
+    eng = Dedup(_cfg())
+    with pytest.raises(ValueError, match="exceeds pad width"):
+        eng.process_padded(eng.init(), np.arange(9, dtype=np.uint32), width=8)
+    sw = Dedup(DedupConfig.for_variant("swbf", memory_bits=1 << 16,
+                                       batch_size=64, window=4))
+    st = sw.init()                                 # ring sized for batch=64
+    with pytest.raises(ValueError, match="event capacity"):
+        sw.process_padded(st, np.arange(10, dtype=np.uint32), width=256)
+    st = sw.init(event_capacity=256)               # widened ring: fine
+    st, res = sw.process_padded(st, np.arange(10, dtype=np.uint32), width=256)
+    assert res.dup.shape == (10,) and not np.asarray(res.dup).any()
+
+
+# --------------------------------------------------- shape-retrace contract //
+def test_serve_session_ragged_lengths_never_recompile():
+    """The satellite regression: ragged ``serve`` lengths land in fixed
+    buckets — ONE compiled trace per bucket ever, not one per length."""
+    sess = ServeSession(_cfg(), _double, buckets=(64, 256))
+    for n in (60, 61, 63, 64, 5, 17, 64, 2, 33):
+        keys = np.arange(n, dtype=np.uint32)
+        out = sess.serve({"key": keys})
+        assert np.array_equal(out, keys * 2.0)
+    n_traces = sess._exec.engine.process_cache_size()
+    assert n_traces == 1                           # every length <= 64
+    sess.serve({"key": np.arange(100, dtype=np.uint32)})   # second bucket
+    assert sess._exec.engine.process_cache_size() == 2
+    for n in (65, 200, 256, 7):                    # no further growth, ever
+        sess.serve({"key": np.arange(n, dtype=np.uint32)})
+    assert sess._exec.engine.process_cache_size() == 2
+
+
+def test_executor_bucket_for_and_validation():
+    ex = MicroBatchExecutor(_cfg(), _double, buckets=(256, 64))
+    assert ex.buckets == (64, 256)                 # sorted
+    assert ex.bucket_for(1) == 64
+    assert ex.bucket_for(64) == 64
+    assert ex.bucket_for(65) == 256
+    with pytest.raises(ValueError, match="exceeds largest bucket"):
+        ex.bucket_for(257)
+    with pytest.raises(ValueError, match="buckets"):
+        MicroBatchExecutor(_cfg(), _double, buckets=())
+
+
+# ----------------------------------------------------------- async frontend //
+def test_frontend_coalesces_concurrent_requests():
+    """64 concurrent submits over buckets=(64,) must coalesce into far
+    fewer engine steps than requests, and every answer must be exact."""
+
+    async def go():
+        fe = ServeFrontend(_cfg(), _double, buckets=(64,),
+                           max_live_batches=2, flush_timeout=5e-3)
+        async with fe:
+            keys = list(range(100, 164))
+            results = await asyncio.gather(*(fe.submit(k) for k in keys))
+        return keys, results, fe
+
+    keys, results, fe = asyncio.run(go())
+    assert all(r.verdict == VERDICT_OK for r in results)
+    assert [float(r.value) for r in results] == [2.0 * k for k in keys]
+    st = fe.stats()
+    assert st["completed"] == 64 and st["shed"] == 0
+    assert st["batches"] < 64                      # actually coalesced
+    assert st["completed"] + st["shed"] == st["submitted"]
+
+
+def test_frontend_dup_and_cache_flags_propagate():
+    async def go():
+        fe = ServeFrontend(_cfg(), _double, buckets=(64,))
+        async with fe:
+            first = await asyncio.gather(*(fe.submit(7) for _ in range(8)))
+            again = await fe.submit(7)
+        return first, again
+
+    first, again = asyncio.run(go())
+    assert all(float(r.value) == 14.0 for r in first + [again])
+    # the replays of key 7 carry the Bloom dup verdict; the later request
+    # is answered straight from the response cache
+    assert sum(r.dup for r in first) >= 7
+    assert again.cached and again.dup
+
+
+def test_frontend_backpressure_sheds_with_retry_verdict():
+    """Admission control: past ``queue_limit`` a submit resolves IMMEDIATELY
+    with verdict="retry" (no value) instead of queueing unboundedly; every
+    admitted request still completes exactly once."""
+
+    async def go():
+        fe = ServeFrontend(_cfg(), _double, buckets=(64,),
+                           max_live_batches=1, queue_limit=8,
+                           flush_timeout=1e-3)
+        async with fe:
+            results = await asyncio.gather(
+                *(fe.submit(k) for k in range(512)))
+        return results, fe
+
+    results, fe = asyncio.run(go())
+    shed = [r for r in results if r.verdict == VERDICT_RETRY]
+    ok = [r for r in results if r.verdict == VERDICT_OK]
+    assert shed, "queue_limit=8 under 512 concurrent submits must shed"
+    assert all(r.value is None for r in shed)
+    for k, r in enumerate(results):                # admitted answers exact
+        if r.verdict == VERDICT_OK:
+            assert float(r.value) == 2.0 * k
+    st = fe.stats()
+    assert st["submitted"] == 512
+    assert st["completed"] == len(ok) and st["shed"] == len(shed)
+    assert st["completed"] + st["shed"] == 512     # nothing lost, nothing hung
+    assert 0 < st["shed_rate"] < 1
+
+
+def test_frontend_partial_batch_flushes_promptly():
+    """Tail-latency bound: 3 requests (far below the 64-bucket) must not
+    wait for the batch to fill — the greedy/flush path dispatches them."""
+
+    async def go():
+        fe = ServeFrontend(_cfg(), _double, buckets=(64,),
+                           flush_timeout=10e-3)
+        async with fe:
+            results = await asyncio.wait_for(
+                asyncio.gather(fe.submit(1), fe.submit(2), fe.submit(3)),
+                timeout=30.0)
+        return results, fe
+
+    results, fe = asyncio.run(go())
+    assert [float(r.value) for r in results] == [2.0, 4.0, 6.0]
+    assert fe.executor.mean_fill <= 3              # never held for a full 64
+
+
+def test_frontend_scorer_failure_fails_batch_not_frontend():
+    calls = {"n": 0}
+
+    def flaky(batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient scorer failure")
+        return _double(batch)
+
+    async def go():
+        fe = ServeFrontend(_cfg(), flaky, buckets=(64,))
+        async with fe:
+            with pytest.raises(RuntimeError, match="transient"):
+                await fe.submit(5)
+            res = await fe.submit(6)               # frontend keeps serving
+        return res
+
+    res = asyncio.run(go())
+    assert res.verdict == VERDICT_OK and float(res.value) == 12.0
+
+
+def test_frontend_swbf_variant_end_to_end():
+    """The windowed variant rides the front-end too: the executor sizes the
+    state ring to the LARGEST bucket so any padded width fits."""
+    cfg = DedupConfig.for_variant("swbf", memory_bits=1 << 16,
+                                  batch_size=64, window=4)
+
+    async def go():
+        fe = ServeFrontend(cfg, _double, buckets=(64, 256))
+        async with fe:
+            results = await asyncio.gather(
+                *(fe.submit(k % 40) for k in range(200)))
+        return results, fe
+
+    results, fe = asyncio.run(go())
+    assert all(r.verdict == VERDICT_OK for r in results)
+    st = fe.executor.state
+    assert st.ring is not None
+    assert st.ring.events.shape[-1] // cfg.k >= 256   # ring fits top bucket
+    assert fe.stats()["dup"] > 0                   # repeats were flagged
+
+
+# ----------------------------------------------------------- verdict parity //
+def test_schedule_replay_parity():
+    """The determinism contract: replaying the recorded admitted schedule
+    (same batches, same padded widths) through a fresh SYNCHRONOUS engine
+    reproduces the front-end's verdicts bit-for-bit (DESIGN.md §5.2)."""
+
+    async def go():
+        fe = ServeFrontend(_cfg(), _double, buckets=(64,),
+                           record_schedule=True)
+        async with fe:
+            await asyncio.gather(*(fe.submit(k % 50) for k in range(300)))
+        return fe
+
+    fe = asyncio.run(go())
+    sched = fe.executor.schedule
+    assert sched and all(w == 64 for w, _ in sched)
+    assert fe.executor.digest() == replay_schedule(_cfg(), sched)
+    # tampering with one admitted key breaks the digest — the check has teeth
+    w0, k0 = sched[0]
+    k0 = k0.copy()
+    k0[0] ^= np.uint32(1)
+    assert (replay_schedule(_cfg(), [(w0, k0)] + list(sched[1:]))
+            != fe.executor.digest())
+
+
+def test_schedule_replay_parity_swbf():
+    cfg = DedupConfig.for_variant("swbf", memory_bits=1 << 16,
+                                  batch_size=64, window=4)
+
+    async def go():
+        fe = ServeFrontend(cfg, _double, buckets=(64,), record_schedule=True)
+        async with fe:
+            await asyncio.gather(*(fe.submit(k % 30) for k in range(240)))
+        return fe
+
+    fe = asyncio.run(go())
+    assert fe.executor.digest() == replay_schedule(cfg, fe.executor.schedule)
+
+
+def test_verdict_digest_is_order_and_shape_sensitive():
+    a = np.array([True, False, True])
+    b = np.array([False, True])
+    assert verdict_digest([a, b]) != verdict_digest([b, a])
+    assert verdict_digest([a]) != verdict_digest([a[:2], a[2:]])
+    assert verdict_digest([a, b]) == verdict_digest([a.copy(), b.copy()])
+
+
+# ---------------------------------------------------------- response cache //
+def test_response_cache_vectorized_semantics():
+    c = ResponseCache(4, "fifo")
+    hit, vals = c.lookup(np.array([1, 2], np.uint32))
+    assert not hit.any()
+    c.admit(np.array([1, 2, 2], np.uint32), [10.0, 20.0, 21.0])
+    hit, vals = c.lookup(np.array([2, 3, 1], np.uint32))
+    assert hit.tolist() == [True, False, True]
+    assert vals[0] == 21.0 and vals[2] == 10.0     # duplicate admit: last wins
+    c.admit(np.array([3, 4, 5], np.uint32), [30.0, 40.0, 50.0])
+    assert len(c) == 4 and c.n_evicted == 1
+    assert set(c) == {2, 3, 4, 5}                  # FIFO: oldest (1) evicted
+    assert ResponseCache(0).lookup(np.array([1], np.uint32))[0].tolist() == \
+        [False]                                    # capacity 0 disables
+
+
+def test_response_cache_lru_renews_on_hit_fifo_does_not():
+    for policy, evicted in (("lru", 2), ("fifo", 1)):
+        c = ResponseCache(3, policy)
+        for k in (1, 2, 3):                        # distinct admit ticks
+            c.admit(np.array([k], np.uint32), [float(k)])
+        c.lookup(np.array([1], np.uint32))         # probe hit renews 1 (LRU)
+        c.admit(np.array([9], np.uint32), [9.0])   # forces one eviction
+        assert set(c) == {1, 2, 3, 9} - {evicted}, policy
+    with pytest.raises(ValueError, match="policy"):
+        ResponseCache(4, "clock")
+
+
+def test_default_buckets_are_sane():
+    assert DEFAULT_BUCKETS == tuple(sorted(DEFAULT_BUCKETS))
+    assert all(b > 0 for b in DEFAULT_BUCKETS)
