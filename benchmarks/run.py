@@ -22,6 +22,7 @@ MODULES = [
     "throughput",         # §1 ingest-rate requirement; engines + kernels
     "counter_throughput", # SBF counter planes vs dense8 (DESIGN §3.6)
     "window_throughput",  # swbf sliding window vs dense8 idiom (DESIGN §3.7)
+    "template_throughput",  # templated steps vs frozen baselines (§3.8)
     "blocked_accuracy",   # beyond-paper: VMEM-blocked layout FPR cost
     "roofline",           # §Roofline terms from the dry-run artifacts
 ]

@@ -5,6 +5,8 @@
     PYTHONPATH=src python scripts/bench_check.py --sharded [--tol 0.35]
     PYTHONPATH=src python scripts/bench_check.py --counter [--tol 0.35]
     PYTHONPATH=src python scripts/bench_check.py --rebalance
+    PYTHONPATH=src python scripts/bench_check.py --template
+    PYTHONPATH=src python scripts/bench_check.py --all
 
 Exit codes: 0 = within tolerance (or improved), 1 = regression, 2 = missing
 artifact. ``--update`` rewrites the artifact's ``current`` section with the
@@ -49,6 +51,14 @@ verdict-parity digest must prove the async front-end returned
 bit-identical dedup verdicts to the synchronous replay of the same
 admitted schedule. QPS trajectory vs the frozen baseline is checked at
 the sharded tolerance (async wall-clock on a shared CPU jitters).
+
+``--template`` validates the committed BENCH_template.json (emitted by
+``python -m benchmarks.template_throughput``): every templated step that
+replaced a hand-written one holds >= 95% of the frozen pre-template row's
+elems/s (DESIGN §3.8), and the cms/hh counting rows are present.
+``--all`` runs every validate-only check (sharded/counter/window/
+rebalance/serving/template) in one call — the CI gate; worst exit code
+wins. The plain re-measuring mode stays a separate local command.
 
 ``--rebalance`` validates the committed BENCH_rebalance.json (emitted by
 ``python -m benchmarks.sharded_scaling --rebalance``) against the DESIGN
@@ -270,6 +280,73 @@ def check_serving(tol: float) -> int:
     return 1 if fail else 0
 
 
+def check_template() -> int:
+    """BENCH_template.json: the DESIGN §3.8 acceptance bar — every templated
+    step that replaced a hand-written one must hold >= 95% of that frozen
+    pre-template row's elems/s (``ratio`` recorded at emission time), with
+    the one-dispatch stream contract intact; the cms/hh rows (no historical
+    twin) must be present with positive throughput. Validates the COMMITTED
+    file only; nothing re-measured."""
+    from benchmarks.template_throughput import (BENCH_PATH as TEMPLATE_PATH,
+                                                GATE_RATIO, GATED_ROWS, ROWS)
+
+    if not os.path.exists(TEMPLATE_PATH):
+        print(f"bench_check: no committed artifact at {TEMPLATE_PATH} — run "
+              f"`python -m benchmarks.template_throughput` first")
+        return 2
+    with open(TEMPLATE_PATH) as f:
+        doc = json.load(f)
+    current = doc.get("current", {})
+    fail = False
+    print(f"{'row':16s} {'ref':>12s} {'current':>12s} {'ratio':>7s}")
+    for name in ROWS:
+        cur = current.get(name, {})
+        if "eps" not in cur:
+            print(f"{name:16s} {'—':>12s} {'MISSING':>12s}   REGRESSION")
+            fail = True
+            continue
+        problems = []
+        if cur["eps"] <= 0:
+            problems.append("non-positive eps")
+        if cur.get("stream_cache") != 1:
+            problems.append(f"stream_cache={cur.get('stream_cache')}")
+        ratio = cur.get("ratio")
+        if name in GATED_ROWS:
+            if ratio is None:
+                problems.append("no ratio vs the frozen baseline row")
+            elif ratio < GATE_RATIO:
+                problems.append(f"ratio {ratio:.2f} < {GATE_RATIO}")
+        status = ("  REGRESSION(" + "; ".join(problems) + ")" if problems
+                  else "")
+        ref = cur.get("ref_eps")
+        print(f"{name:16s} {ref or 0:12.0f} {cur['eps']:12.0f} "
+              f"{(ratio if ratio else float('nan')):6.2f}x{status}")
+        fail = fail or bool(problems)
+    return 1 if fail else 0
+
+
+def check_all(tol: float | None) -> int:
+    """Validate EVERY committed BENCH artifact in one call (the CI gate):
+    worst exit code wins, each section labelled. Validate-only — the plain
+    (re-measuring) throughput mode stays a separate local command; CI gates
+    only on committed artifacts (wall-clock on shared runners is noise)."""
+    checks = (
+        ("sharded", lambda: check_sharded(0.35 if tol is None else tol)),
+        ("counter", lambda: check_counter(0.35 if tol is None else tol)),
+        ("window", lambda: check_window(0.35 if tol is None else tol)),
+        ("rebalance", check_rebalance),
+        ("serving", lambda: check_serving(0.35 if tol is None else tol)),
+        ("template", check_template),
+    )
+    worst = 0
+    for name, fn in checks:
+        print(f"=== bench_check --{name} ===")
+        rc = fn()
+        print(f"--- {name}: {'OK' if rc == 0 else f'FAIL({rc})'} ---")
+        worst = max(worst, rc)
+    return worst
+
+
 def check_counter(tol: float) -> int:
     """BENCH_counter.json: trajectory + the DESIGN §3.6 acceptance bar —
     plane-layout SBF >= 2x dense8 SBF elems/s at the paper-scale row."""
@@ -317,7 +394,18 @@ def main(argv=None) -> int:
                          "front-end >= 2x per-request QPS, latency/shed "
                          "sanity, bucket no-retrace contract, verdict-"
                          "parity digest, DESIGN §5.2)")
+    ap.add_argument("--template", action="store_true",
+                    help="validate BENCH_template.json (templated steps "
+                         ">= 95% of the frozen pre-template rows' elems/s, "
+                         "DESIGN §3.8)")
+    ap.add_argument("--all", action="store_true",
+                    help="validate every committed BENCH artifact in one "
+                         "call (the CI gate); worst exit code wins")
     args = ap.parse_args(argv)
+    if args.all:
+        return check_all(args.tol)
+    if args.template:
+        return check_template()
     if args.rebalance:
         return check_rebalance()
     if args.serving:

@@ -31,8 +31,9 @@ _DEPENDENTS = {
     "all_to_all": "the sharded dedup dispatch (repro.dedup.sharded)",
     "ppermute": "the elastic shard-rebalance permute (repro.dedup.sharded, "
                 "repro.distributed.sharding.rebalance_collect; DESIGN §4.4)",
-    "pallas": "the fused single-launch steps (repro.kernels.fused_step, "
-              "repro.kernels.fused_counter_step, cfg.backend='pallas')",
+    "pallas": "the fused single-launch steps (repro.kernels.fused_template "
+              "and its fused_step/fused_counter_step shims, "
+              "cfg.backend='pallas')",
 }
 
 

@@ -54,6 +54,10 @@ def layout_meta(cfg: DedupConfig) -> dict:
     """The layout facts a checkpoint must carry to be migratable later."""
     return {
         "filter_variant": cfg.variant,
+        # which SketchSpec family/ops wrote these cells (DESIGN §3.8) — a
+        # restoring operator can see the sketch semantics (bitset membership
+        # vs saturating counters) without resolving the variant name
+        "filter_sketch": _sketch_tag(cfg),
         "filter_layout": cfg.effective_layout,
         "filter_planes": cfg.n_planes if cfg.is_planes else 0,
         "filter_cells": cfg.s,
@@ -63,7 +67,18 @@ def layout_meta(cfg: DedupConfig) -> dict:
         # rebuild the same (window, d, W) ring slots and event capacity
         "filter_window": cfg.window if cfg.variant == "swbf" else 0,
         "filter_cbf_bits": cfg.cbf_bits if cfg.variant == "swbf" else 0,
+        "filter_count_bits": (cfg.count_bits
+                              if cfg.variant in ("cms", "hh") else 0),
+        "filter_count_threshold": (cfg.count_threshold
+                                   if cfg.variant in ("cms", "hh") else 0),
     }
+
+
+def _sketch_tag(cfg: DedupConfig) -> str:
+    """``family/probe`` of the variant's registered SketchSpec (§3.8)."""
+    from ..core.sketch import get_spec
+    spec = get_spec(cfg.variant)
+    return f"{spec.family}/{spec.probe}"
 
 
 def router_meta(state: FilterState) -> dict:
@@ -130,7 +145,7 @@ def _cells_from_state(state: FilterState, cfg: DedupConfig) -> jnp.ndarray:
     """Decode any layout to (n_rows, s) integer cell values."""
     if not state.is_packed:                          # dense8: already cells
         return state.bits.astype(jnp.int32)
-    if cfg.variant in ("sbf", "swbf"):
+    if cfg.is_counter:
         planes = state.bits if state.bits.ndim == 3 else state.bits[None]
         return unpack_cells(planes, cfg.s)
     return unpack_bits(state.bits, cfg.s).astype(jnp.int32)
@@ -152,7 +167,9 @@ def migrate_filter_state(state: FilterState, src_cfg: DedupConfig,
                         ("sbf_max", src_cfg.sbf_max, dst_cfg.sbf_max),
                         ("window", src_cfg.window, dst_cfg.window),
                         ("bits_per_cell", src_cfg.bits_per_cell,
-                         dst_cfg.bits_per_cell)):
+                         dst_cfg.bits_per_cell),
+                        ("count_threshold", src_cfg.count_threshold,
+                         dst_cfg.count_threshold)):
         if a != b:
             raise ValueError(
                 f"cannot migrate between different filters: {field} "
@@ -163,7 +180,7 @@ def migrate_filter_state(state: FilterState, src_cfg: DedupConfig,
         cells = _cells_from_state(state, src_cfg)        # (n_rows, s)
         if dst_cfg.effective_layout == "dense8":
             bits = cells.astype(jnp.uint8)
-        elif dst_cfg.variant in ("sbf", "swbf"):
+        elif dst_cfg.is_counter:
             planes = pack_cells(cells, dst_cfg.n_planes)  # (d, n_rows, W)
             bits = planes[0] if dst_cfg.n_planes == 1 else planes
         else:

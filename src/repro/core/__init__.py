@@ -5,18 +5,22 @@ BSBFSD, RLBSBF), two execution engines (sequential oracle / batched
 vectorized), packed + unpacked layouts, and the paper's analytical model.
 """
 
-from .config import (ALL_VARIANTS, DedupConfig, k_from_fpr_t, rsbf_k,
-                     sbf_optimal_p, VARIANTS, WINDOWED_VARIANTS)
+from .config import (ALL_VARIANTS, COUNTING_VARIANTS, DedupConfig,
+                     k_from_fpr_t, rsbf_k, sbf_optimal_p, VARIANTS,
+                     WINDOWED_VARIANTS)
 from .state import FilterState, WindowRing, init_state, state_memory_bytes
 from .engine import Dedup, get_engine
-from .batched import BatchResult, make_batched_step, intra_batch_seen
+from .batched import (BatchResult, make_batched_step, make_templated_step,
+                      intra_batch_seen)
+from .sketch import SKETCHES, SketchSpec, get_spec
 from .variants import make_scan_step
 from . import hashing, packed, theory
 
 __all__ = [
     "DedupConfig", "FilterState", "WindowRing", "Dedup", "get_engine",
     "BatchResult", "init_state", "state_memory_bytes", "make_batched_step",
+    "make_templated_step", "SketchSpec", "SKETCHES", "get_spec",
     "make_scan_step", "intra_batch_seen", "k_from_fpr_t", "rsbf_k",
-    "sbf_optimal_p", "VARIANTS", "WINDOWED_VARIANTS", "ALL_VARIANTS",
-    "hashing", "packed", "theory",
+    "sbf_optimal_p", "VARIANTS", "WINDOWED_VARIANTS", "COUNTING_VARIANTS",
+    "ALL_VARIANTS", "hashing", "packed", "theory",
 ]

@@ -22,15 +22,19 @@ first occurrence as duplicate) and is measured in tests/benchmarks
 ``valid`` masks let ragged stream tails ride through fixed-shape jit steps as
 no-ops.
 
-The per-variant decision logic (``make_decision_fn``) and the randomness
-draws (``draw_randomness``) are factored out so the jnp path here and the
-fused Pallas kernel (``repro.kernels.fused_step``) trace the *same* code and
-stay bit-identical (DESIGN.md §3.4).
+Every variant is described by a ``SketchSpec`` (``core.sketch``, DESIGN.md
+§3.8): probe op, decision fn, event-delta op, load-delta op, and the state's
+plane count d. ``make_batched_step`` generates the jnp step from the spec
+(``make_templated_step`` below — one factory for both the bitset and counter
+families), and ``repro.kernels.fused_template.make_fused_step`` generates
+the single-launch Pallas step from the SAME spec — the decision functions
+and word algebra are traced inside the kernel, so the two backends are
+bit-identical by construction (DESIGN.md §3.4/§3.6/§3.8).
 """
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +44,9 @@ from .hashing import derive_seeds, hash_positions
 from .packed import (clamped_run_counts, count_planes_from_sorted,
                      delta_from_sorted_positions, planes_nonzero,
                      planes_saturating_add, planes_saturating_sub,
-                     planes_set_value, popcount, probe_packed,
-                     probe_sorted_packed, run_heads, run_heads_1d, split_pos)
+                     planes_set_value, popcount, probe_cell_values,
+                     probe_packed, probe_sorted_packed, run_heads,
+                     run_heads_1d, split_pos)
 from .state import FilterState, WindowRing
 
 
@@ -254,104 +259,53 @@ def sbf_planes_3d(bits: jnp.ndarray) -> jnp.ndarray:
 
 
 def make_sbf_planes_step(cfg: DedupConfig) -> BatchedStep:
-    """SBF on the plane layout (DESIGN.md §3.6) — bit-identical to the
-    dense8 SBF branch (same probes, same rng draws, same snapshot
-    semantics, same cell values and load), with every filter touch a word
-    op: multi-plane OR gather probe, borrow-chain saturating decrement,
-    one-pass set-to-Max, and exact incremental load from the touched
-    words' nonzero popcount delta (no O(s) reduce — the dense8 branch's
-    recount was the last one standing)."""
-    cfg = cfg.validate()
-    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
-    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
-              if cfg.block_bits else None)
-    s, W, cmax = cfg.s, cfg.s_words, cfg.sbf_max
-    squeeze = cfg.n_planes == 1
-
-    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
-        b = keys.shape[0]
-        planes = sbf_planes_3d(state.bits)[:, 0, :]               # (d, W)
-        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)   # (B, k)
-        nzw = planes_nonzero(planes)                              # (W,)
-        w_idx, mask = split_pos(pos)
-        vals = (nzw[w_idx] & mask) != 0                           # (B, k)
-        dup = jnp.all(vals, axis=1) & valid
-        rng, start = draw_sbf_randomness(cfg, state.rng, b)
-        ev = sbf_event_deltas(cfg, pos, start, valid)
-        new = planes_saturating_sub(planes, ev.count_planes)
-        new = planes_set_value(new, ev.set_delta, cmax)
-        if cfg.debug_exact_load:
-            load = popcount(planes_nonzero(new)[None])
-        else:
-            # exact incremental load (nonzero-cell count), PR-1 style event
-            # accounting from pre/post values at the sorted events (§3.1):
-            #   gained — set cells whose PRE value was zero (they end at Max);
-            #   lost   — decremented cells that were nonzero and whose POST
-            #            nonzero bit is clear (decayed to zero, not re-set —
-            #            sets apply after decrements, so the post bit IS the
-            #            "was it refreshed" flag).
-            # Each cell counts once (run heads); batch-sized gathers only.
-            new_nz = planes_nonzero(new)
-            sentinel = 32 * W
-
-            def nz_bit(words, sp):
-                got = words[jnp.minimum(sp >> 5, W - 1)]
-                return (got >> (sp & 31).astype(jnp.uint32)) & jnp.uint32(1)
-
-            gained = jnp.sum(ev.set_head & (ev.set_sorted < sentinel)
-                             & (nz_bit(nzw, ev.set_sorted) == 0),
-                             dtype=jnp.int32)
-            lost = jnp.sum(ev.dec_head & (ev.dec_sorted < sentinel)
-                           & (nz_bit(nzw, ev.dec_sorted) == 1)
-                           & (nz_bit(new_nz, ev.dec_sorted) == 0),
-                           dtype=jnp.int32)
-            load = state.load + gained - lost
-        bits = new[:, None, :] if not squeeze else new
-        n_valid = valid.sum(dtype=jnp.int32)
-        return (FilterState(bits, state.position + n_valid, load, rng),
-                BatchResult(dup=dup, inserted=valid))
-
-    return step
+    """SBF on the plane layout (DESIGN.md §3.6) — the sketch template's
+    counter step under the "sbf" spec, kept as a named factory for
+    back-compat. Bit-identical to the dense8 SBF branch (same probes, same
+    rng draws, same snapshot semantics, same cell values and load)."""
+    from .sketch import get_spec
+    return make_counter_planes_step(cfg, get_spec("sbf"))
 
 
-class SwbfBatchDeltas(NamedTuple):
-    """One SWBF batch's insert events, reduced to word deltas (DESIGN.md
-    §3.7). Shared by the jnp plane step and the fused Pallas kernel — both
-    backends apply (and ring-store) the SAME deltas, so they are
-    bit-identical by construction."""
+class CountBatchDeltas(NamedTuple):
+    """One batch's insert/increment events, reduced to word deltas (DESIGN.md
+    §3.7/§3.8). Shared by the jnp plane step and the fused Pallas kernel —
+    both backends apply (and, for swbf, ring-store) the SAME deltas, so they
+    are bit-identical by construction."""
     count_planes: jnp.ndarray   # (d, W) uint32 — per-cell event
                                 #   multiplicities clamped to 2^d - 1,
-                                #   as bit-planes (the ring payload)
+                                #   as bit-planes (swbf: the ring payload)
     ins_sorted: jnp.ndarray     # (E,) int32 — sorted insert cells, sentinel
-                                #   32·W padded to the ring's event width
+                                #   32·W padded to the event width
     ins_head: jnp.ndarray       # (E,) bool — first event of each cell
 
 
-def swbf_event_deltas(cfg: DedupConfig, pos: jnp.ndarray, valid: jnp.ndarray,
-                      width: int) -> SwbfBatchDeltas:
+def count_event_deltas(cfg: DedupConfig, pos: jnp.ndarray, valid: jnp.ndarray,
+                       width: int) -> CountBatchDeltas:
     """A batch's B·k insert positions -> clamped count planes + the sorted
     event list, through the same one-sort machinery as the SBF deltas: a
     cell's increment is its event multiplicity clamped to the counter cap
-    2^d - 1 (clamping is consistent — the ring stores and later subtracts
+    2^d - 1 (clamping is consistent — swbf's ring stores and later subtracts
     the SAME clamped planes, and the host oracle replicates it). ``width``
-    pads the sorted list with sentinels up to the ring's event capacity so
-    ragged batches (and the sharded dispatch width) share one slot shape."""
+    pads the sorted list with sentinels — B·k for the counting sketches, the
+    ring's event capacity for swbf, so ragged batches (and the sharded
+    dispatch width) share one slot shape."""
     W, d = cfg.s_words, cfg.n_planes
     cmax = (1 << d) - 1
     sentinel = 32 * W
     flat = jnp.where(valid[:, None], pos, sentinel).reshape(-1)
     if width < flat.shape[0]:
         raise ValueError(
-            f"swbf step saw {flat.shape[0]} events but the state ring holds "
-            f"{width} — init the state with event_capacity >= the step's "
-            f"element count (DESIGN §3.7)")
+            f"{cfg.variant} step saw {flat.shape[0]} events but the event "
+            f"width is {width} — init the state with event_capacity >= the "
+            f"step's element count (DESIGN §3.7)")
     if width > flat.shape[0]:
         flat = jnp.concatenate(
             [flat, jnp.full((width - flat.shape[0],), sentinel, flat.dtype)])
     sp = jnp.sort(flat)
     head, cnt = clamped_run_counts(sp, cmax)
     count_planes = count_planes_from_sorted(sp, head, cnt, d, W)   # (d, W)
-    return SwbfBatchDeltas(count_planes, sp, head)
+    return CountBatchDeltas(count_planes, sp, head)
 
 
 def ring_expire_planes(cfg: DedupConfig, ring: WindowRing):
@@ -372,7 +326,7 @@ def ring_expire_planes(cfg: DedupConfig, ring: WindowRing):
     return ev, head, planes
 
 
-def ring_push(ring: WindowRing, ev: SwbfBatchDeltas, window: int
+def ring_push(ring: WindowRing, ev: CountBatchDeltas, window: int
               ) -> WindowRing:
     """Overwrite the expired slot with the arriving batch's event list and
     advance. Identical jnp code on both backends — the ring is engine
@@ -385,45 +339,89 @@ def ring_push(ring: WindowRing, ev: SwbfBatchDeltas, window: int
 
 def make_swbf_planes_step(cfg: DedupConfig) -> BatchedStep:
     """Sliding-window counting-Bloom dedup on the plane layout (DESIGN.md
-    §3.7): probe the batch-entry snapshot (duplicate iff all k probed cells
-    nonzero, i.e. the key appeared within the last ``window`` batches, OR an
-    equal key occurred earlier in this batch), borrow-chain-decrement the
-    expiring slot's count planes, carry-chain-increment the arriving
-    batch's, and track the exact nonzero-cell load from batch-sized event
-    gathers (§3.1 discipline — no O(s) reduce). Deterministic: no random
-    deletions, the rng threads through untouched."""
+    §3.7) — the sketch template's counter step under the "swbf" spec, kept
+    as a named factory for back-compat: snapshot probe (duplicate iff all k
+    probed cells nonzero OR an equal key occurred earlier in the batch),
+    borrow-chain expiry of the oldest slot, carry-chain increment of the
+    arriving batch, exact incremental load (§3.1 discipline), rng untouched.
+    """
+    from .sketch import get_spec
+    return make_counter_planes_step(cfg, get_spec("swbf"))
+
+
+class CounterStepDeltas(NamedTuple):
+    """A counter-family batch reduced to the plane algebra's operands
+    (DESIGN.md §3.8). Built per-spec (``core.sketch``) and consumed
+    identically by the jnp step and the fused Pallas kernel wrapper — the
+    plane deltas become kernel operands, the sorted event lists feed the
+    §3.1 load accounting, and the optional ring payload is pushed by the
+    engine-side (non-kernel) code. ``None`` marks an op the sketch lacks.
+    Application order is fixed: subtract, then set/add (insertions win)."""
+    sub_planes: Optional[jnp.ndarray]   # (d, W) u32 decrement planes
+    sub_events: Optional[jnp.ndarray]   # (E,) i32 sorted decrement cells
+    sub_heads: Optional[jnp.ndarray]    # (E,) bool first event per cell
+    add_planes: Optional[jnp.ndarray]   # (d, W) u32 increment planes
+    set_delta: Optional[jnp.ndarray]    # (W,) u32 set-to-Max OR mask
+    ins_events: jnp.ndarray             # (E',) i32 sorted insert cells
+    ins_heads: jnp.ndarray              # (E',) bool first event per cell
+    ring_payload: Optional[CountBatchDeltas]  # swbf: this batch's ring slot
+
+
+def make_counter_planes_step(cfg: DedupConfig, spec) -> BatchedStep:
+    """The counter-family step generator (DESIGN.md §3.8): one jnp ingest
+    step over the (d, W) bit-plane algebra, specialized by a ``SketchSpec``
+    — probe op (nonzero bit vs d-bit cell value), decision fn, event-delta
+    builder (decrement/set/add planes + sorted event lists), and the §3.1
+    exact incremental nonzero-cell load shared by every sketch. sbf, swbf,
+    cms and hh are all THIS function under different specs; the fused
+    Pallas twin is generated from the same spec by
+    ``kernels.fused_template.make_fused_step``."""
     cfg = cfg.validate()
     seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
     bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
               if cfg.block_bits else None)
-    s, W, window = cfg.s, cfg.s_words, cfg.window
+    s, W = cfg.s, cfg.s_words
     squeeze = cfg.n_planes == 1
+    decide = spec.make_decide(cfg)
+    events_fn = spec.make_events(cfg)
 
     def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
-        ring = state.ring
+        b = keys.shape[0]
         planes = sbf_planes_3d(state.bits)[:, 0, :]               # (d, W)
         pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)   # (B, k)
         nzw = planes_nonzero(planes)                              # (W,)
-        w_idx, mask = split_pos(pos)
-        vals = (nzw[w_idx] & mask) != 0                           # (B, k)
-        seen = intra_batch_seen(keys, valid)
-        dup = (jnp.all(vals, axis=1) | seen) & valid
-        ev = swbf_event_deltas(cfg, pos, valid, ring.events.shape[-1])
-        exp_events, exp_head, expire_counts = ring_expire_planes(cfg, ring)
-        new = planes_saturating_add(
-            planes_saturating_sub(planes, expire_counts), ev.count_planes)
+        if spec.probe == "value":
+            vals = probe_cell_values(planes, pos)                 # (B, k) i32
+        else:
+            w_idx, mask = split_pos(pos)
+            vals = (nzw[w_idx] & mask) != 0                       # (B, k) bool
+        seen = intra_batch_seen(keys, valid) if spec.uses_seen else None
+        dup = decide(vals, valid, seen)
+        if spec.draw is not None:
+            rng, rnd = spec.draw(cfg, state.rng, b)
+        else:
+            rng, rnd = state.rng, None
+        ev = events_fn(state, pos, valid, rnd)
+        new = planes
+        if ev.sub_planes is not None:
+            new = planes_saturating_sub(new, ev.sub_planes)
+        if ev.set_delta is not None:
+            # set-to-Max writes the sketch's counter ceiling (sbf_max), which
+            # may sit below the plane capacity 2^d - 1
+            new = planes_set_value(new, ev.set_delta, cfg.sbf_max)
+        if ev.add_planes is not None:
+            new = planes_saturating_add(new, ev.add_planes)
         if cfg.debug_exact_load:
             load = popcount(planes_nonzero(new)[None])
         else:
-            # exact incremental nonzero-cell load (§3.1/§3.7):
-            #   gained — insert cells whose PRE value was zero (their head
-            #            increment is >= 1, so they end nonzero);
-            #   lost   — expired cells that were nonzero and whose POST
-            #            nonzero bit is clear (decayed to zero and not
-            #            re-inserted — increments apply after decrements,
-            #            so the post bit IS the "was it refreshed" flag).
-            # The two sets are disjoint (pre-zero vs pre-nonzero); each cell
-            # counts once (run heads); batch-sized gathers only.
+            # exact incremental load (nonzero-cell count, §3.1):
+            #   gained — insert/set cells whose PRE value was zero (their
+            #            head event leaves them nonzero);
+            #   lost   — decremented cells that were nonzero and whose POST
+            #            nonzero bit is clear (decayed to zero, not
+            #            refreshed — inserts apply after decrements, so the
+            #            post bit IS the "was it refreshed" flag).
+            # Each cell counts once (run heads); batch-sized gathers only.
             new_nz = planes_nonzero(new)
             sentinel = 32 * W
 
@@ -431,78 +429,77 @@ def make_swbf_planes_step(cfg: DedupConfig) -> BatchedStep:
                 got = words[jnp.minimum(sp >> 5, W - 1)]
                 return (got >> (sp & 31).astype(jnp.uint32)) & jnp.uint32(1)
 
-            gained = jnp.sum(ev.ins_head & (ev.ins_sorted < sentinel)
-                             & (nz_bit(nzw, ev.ins_sorted) == 0),
+            gained = jnp.sum(ev.ins_heads & (ev.ins_events < sentinel)
+                             & (nz_bit(nzw, ev.ins_events) == 0),
                              dtype=jnp.int32)
-            lost = jnp.sum(exp_head & (exp_events < sentinel)
-                           & (nz_bit(nzw, exp_events) == 1)
-                           & (nz_bit(new_nz, exp_events) == 0),
-                           dtype=jnp.int32)
+            if ev.sub_events is None:
+                lost = jnp.int32(0)
+            else:
+                lost = jnp.sum(ev.sub_heads & (ev.sub_events < sentinel)
+                               & (nz_bit(nzw, ev.sub_events) == 1)
+                               & (nz_bit(new_nz, ev.sub_events) == 0),
+                               dtype=jnp.int32)
             load = state.load + gained - lost
         bits = new[:, None, :] if not squeeze else new
+        ring = state.ring
+        if ev.ring_payload is not None:
+            ring = ring_push(ring, ev.ring_payload, cfg.window)
         n_valid = valid.sum(dtype=jnp.int32)
-        new_state = FilterState(bits, state.position + n_valid, load,
-                                state.rng, ring_push(ring, ev, window))
+        new_state = FilterState(bits, state.position + n_valid, load, rng,
+                                ring)
         return new_state, BatchResult(dup=dup, inserted=valid)
 
     return step
 
 
-def make_batched_step(cfg: DedupConfig) -> BatchedStep:
+def _make_sbf_dense8_step(cfg: DedupConfig) -> BatchedStep:
+    """Dense uint8 SBF reference branch — deliberately NOT spec-driven: it
+    is the cross-check the plane steps are tested bit-identical against, so
+    it keeps its own naive scatter/recount formulation (DESIGN.md §3.6)."""
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    s = cfg.s
+    p_run, cmax = cfg.sbf_p_effective, cfg.sbf_max
+
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+        b = keys.shape[0]
+        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)   # (B, k)
+        vals = state.bits[0, pos]                             # (B, k)
+        dup = jnp.all(vals > 0, axis=1) & valid
+        rng, start = draw_sbf_randomness(cfg, state.rng, b)
+        run = (start[:, None] + jnp.arange(p_run, dtype=jnp.int32)) % s
+        run = jnp.where(valid[:, None], run, s)               # drop pads
+        dec = jnp.zeros((s,), jnp.int32).at[run.reshape(-1)].add(
+            1, mode="drop")
+        cells = jnp.maximum(state.bits[0].astype(jnp.int32) - dec, 0)
+        bits = cells.astype(jnp.uint8)[None, :]
+        set_pos = jnp.where(valid[:, None], pos, s)
+        bits = bits.at[0, set_pos.reshape(-1)].set(jnp.uint8(cmax),
+                                                   mode="drop")
+        # counters decay by runs of P — no cheap per-bit delta exists, so
+        # the SBF *baseline* keeps the O(s) recount (DESIGN.md §3.1)
+        load = jnp.array([(bits[0] > 0).sum(dtype=jnp.int32)])
+        n_valid = valid.sum(dtype=jnp.int32)
+        new = FilterState(bits, state.position + n_valid, load, rng)
+        return new, BatchResult(dup=dup, inserted=valid)
+
+    return step
+
+
+def make_bitset_step(cfg: DedupConfig, spec) -> BatchedStep:
+    """The bitset-family step generator (DESIGN.md §3.1/§3.8): one jnp
+    ingest step over the 1-bit R = (A & ~D) | I algebra, specialized by a
+    ``SketchSpec`` — the spec supplies the decision fn and the randomness
+    draw; probe/scatter/load are the family-shared machinery. rsbf, bsbf,
+    bsbfsd and rlbsbf are all THIS function under different specs."""
     cfg = cfg.validate()
     seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
     bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
               if cfg.block_bits else None)
     s, k = cfg.s, cfg.k
     rows = jnp.arange(k, dtype=jnp.int32)
-
-    # ---------------- SWBF (sliding-window counters, §3.7) --------------- //
-    if cfg.variant == "swbf":
-        if cfg.backend == "pallas":
-            from ..kernels.fused_counter_step import make_fused_swbf_step
-            return make_fused_swbf_step(cfg)
-        return make_swbf_planes_step(cfg)
-
-    # ---------------- SBF (counter cells) -------------------------------- //
-    if cfg.variant == "sbf":
-        if cfg.is_planes:
-            if cfg.backend == "pallas":
-                from ..kernels.fused_counter_step import \
-                    make_fused_counter_step
-                return make_fused_counter_step(cfg)
-            return make_sbf_planes_step(cfg)
-        p_run, cmax = cfg.sbf_p_effective, cfg.sbf_max
-
-        def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
-            b = keys.shape[0]
-            pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)                  # (B, k)
-            vals = state.bits[0, pos]                             # (B, k)
-            dup = jnp.all(vals > 0, axis=1) & valid
-            rng, start = draw_sbf_randomness(cfg, state.rng, b)
-            run = (start[:, None] + jnp.arange(p_run, dtype=jnp.int32)) % s
-            run = jnp.where(valid[:, None], run, s)               # drop pads
-            dec = jnp.zeros((s,), jnp.int32).at[run.reshape(-1)].add(
-                1, mode="drop")
-            cells = jnp.maximum(state.bits[0].astype(jnp.int32) - dec, 0)
-            bits = cells.astype(jnp.uint8)[None, :]
-            set_pos = jnp.where(valid[:, None], pos, s)
-            bits = bits.at[0, set_pos.reshape(-1)].set(jnp.uint8(cmax),
-                                                       mode="drop")
-            # counters decay by runs of P — no cheap per-bit delta exists, so
-            # the SBF *baseline* keeps the O(s) recount (DESIGN.md §3.1)
-            load = jnp.array([(bits[0] > 0).sum(dtype=jnp.int32)])
-            n_valid = valid.sum(dtype=jnp.int32)
-            new = FilterState(bits, state.position + n_valid, load, rng)
-            return new, BatchResult(dup=dup, inserted=valid)
-
-        return step
-
-    # ---------------- 1-bit variants ------------------------------------ //
-    if cfg.backend == "pallas":
-        from ..kernels.fused_step import make_fused_batched_step
-        return make_fused_batched_step(cfg)
-
-    decide = make_decision_fn(cfg)
+    decide = spec.make_decide(cfg)
     # sentinel for disabled lanes: beyond the filter AND in word W (so the
     # packed delta scatter drops it) — 32*ceil(s/32), not s, because s's own
     # word can be W-1 when 32 does not divide s
@@ -547,7 +544,7 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
         vals = probe(state.bits, pos)                             # (B, k)
         seen = intra_batch_seen(keys, valid)
         i_t = state.position + jnp.arange(b, dtype=jnp.int32)
-        rng, rnd = draw_randomness(cfg, state.rng, b)
+        rng, rnd = spec.draw(cfg, state.rng, b)
         dup, insert, del_mask = decide(vals, valid, seen, i_t, state.load, rnd)
         ins_mask = jnp.broadcast_to(insert[:, None], (b, k))
         spi = sorted_enabled_positions(pos, ins_mask, sentinel)
@@ -567,3 +564,53 @@ def make_batched_step(cfg: DedupConfig) -> BatchedStep:
         return new, BatchResult(dup=dup, inserted=insert)
 
     return step
+
+
+def make_templated_step(cfg: DedupConfig, spec=None) -> BatchedStep:
+    """The ONE jnp step factory (DESIGN.md §3.8): resolve the variant's
+    ``SketchSpec`` and hand it to the family's generator. Pass ``spec`` to
+    run an unregistered/experimental sketch through the same machinery."""
+    cfg = cfg.validate()
+    if spec is None:
+        from .sketch import get_spec
+        spec = get_spec(cfg.variant)
+    if spec.family == "counter":
+        return make_counter_planes_step(cfg, spec)
+    return make_bitset_step(cfg, spec)
+
+
+def make_estimate_fn(cfg: DedupConfig):
+    """Serve-path frequency readout for the counting sketches (DESIGN.md
+    §3.8): estimate(state, keys) -> (B,) int32 count-min estimates, the MIN
+    over the k probed d-bit cell values. Never under-estimates a key's true
+    arrival count while every probed counter is below saturation (each
+    arrival increments all k of its cells by >= 1, clamped at 2^d - 1);
+    over-estimation comes only from hash collisions — the classic CM bound
+    eps = e/width at k = ln(1/delta) rows (arXiv:1212.3964 companion
+    sketches). Read-only: no state change, no rng consumption."""
+    cfg = cfg.validate()
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    s = cfg.s
+
+    def estimate(state: FilterState, keys: jnp.ndarray) -> jnp.ndarray:
+        planes = sbf_planes_3d(state.bits)[:, 0, :]               # (d, W)
+        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)
+        return jnp.min(probe_cell_values(planes, pos), axis=1)
+
+    return estimate
+
+
+def make_batched_step(cfg: DedupConfig) -> BatchedStep:
+    """Backend dispatch: the dense8 SBF reference keeps its own branch (it
+    is the cross-check, not a template instance); everything else is the
+    sketch template — ``fused_template.make_fused_step`` on the Pallas
+    backend, ``make_templated_step`` on jnp (DESIGN.md §3.8)."""
+    cfg = cfg.validate()
+    if cfg.variant == "sbf" and not cfg.is_planes:
+        return _make_sbf_dense8_step(cfg)
+    if cfg.backend == "pallas":
+        from ..kernels.fused_template import make_fused_step
+        return make_fused_step(cfg)
+    return make_templated_step(cfg)

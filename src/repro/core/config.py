@@ -26,7 +26,17 @@ VARIANTS = ("sbf", "rsbf", "bsbf", "bsbfsd", "rlbsbf")
 # element is reported duplicate iff it appeared within the last
 # ``window`` batches.
 WINDOWED_VARIANTS = ("swbf",)
-ALL_VARIANTS = VARIANTS + WINDOWED_VARIANTS
+# Counting sketches riding the sketch template (DESIGN.md §3.8) as pure
+# configuration — one shared array of d-bit saturating counters probed by k
+# hashes, incremented on every arrival, never decremented. "cms" is count-min
+# frequency estimation: the per-key estimate is the MIN over the k probed
+# cells (>= the true count while counters are below saturation), and the dup
+# verdict is estimate >= count_threshold (1 = "seen before", the counting-
+# Bloom dedup verdict). "hh" is heavy-hitter tracking: same counters, the
+# verdict flags keys whose estimate crossed count_threshold, and the
+# top-loaded cells are surfaced through engine.top_cells / StreamMetrics.
+COUNTING_VARIANTS = ("cms", "hh")
+ALL_VARIANTS = VARIANTS + WINDOWED_VARIANTS + COUNTING_VARIANTS
 
 
 def k_from_fpr_t(fpr_t: float) -> int:
@@ -84,6 +94,12 @@ class DedupConfig:
     cbf_bits: int = 4                    # swbf: counter width d (bit-planes);
                                          # per-batch multiplicities and cells
                                          # saturate at 2^d - 1
+    # --- counting sketches (cms/hh, DESIGN.md §3.8) ---
+    count_bits: int = 8                  # cms/hh: counter width d (bit-planes);
+                                         # cells saturate at 2^d - 1
+    count_threshold: int = 1             # cms/hh: dup/heavy verdict fires when
+                                         # the min-over-k cell estimate reaches
+                                         # this count (1 = seen at least once)
     # --- engine knobs ---
     batch_size: int = 8192               # batched-engine width
     layout: str = "auto"                 # "auto" | "dense8" | "planes" — cell
@@ -123,20 +139,30 @@ class DedupConfig:
 
     # ------------------------------------------------------------------ //
     @property
+    def is_counter(self) -> bool:
+        """Counter-cell structures — one shared array of d-bit saturating
+        cells probed by k hashes (Deng & Rafiei layout): SBF, SWBF, and the
+        counting sketches (cms/hh)."""
+        return self.variant in ("sbf", "swbf") + COUNTING_VARIANTS
+
+    @property
     def bits_per_cell(self) -> int:
         if self.variant == "sbf":
             return max(1, (self.sbf_max).bit_length())
         if self.variant == "swbf":
             return self.cbf_bits
+        if self.variant in COUNTING_VARIANTS:
+            return self.count_bits
         return 1
 
     @property
     def effective_layout(self) -> str:
         """Resolved cell layout: ``layout`` wins; "auto" maps ``packed`` to
-        the plane layout and everything else to dense8 — except swbf, which
-        only exists on the plane machinery (§3.7) and resolves to planes."""
+        the plane layout and everything else to dense8 — except swbf and the
+        counting sketches, which only exist on the plane machinery
+        (§3.7/§3.8) and resolve to planes."""
         if self.layout == "auto":
-            if self.variant == "swbf":
+            if self.variant == "swbf" or self.variant in COUNTING_VARIANTS:
                 return "planes"
             return "planes" if self.packed else "dense8"
         return self.layout
@@ -158,16 +184,16 @@ class DedupConfig:
         structures' single array (cells = M / bits_per_cell) — per shard,
         for memory parity."""
         per_shard = self.memory_bits // max(1, self.shards)
-        if self.variant in ("sbf", "swbf"):
+        if self.is_counter:
             return max(8, per_shard // self.bits_per_cell)
         return max(8, per_shard // self.k)
 
     @property
     def n_rows(self) -> int:
-        """Rows of the bits array: the counter structures (SBF, SWBF) keep
-        one shared cell array probed by k hashes (Deng & Rafiei layout); the
-        paper's variants keep k filters."""
-        return 1 if self.variant in ("sbf", "swbf") else self.k
+        """Rows of the bits array: the counter structures (SBF, SWBF,
+        cms/hh) keep one shared cell array probed by k hashes (Deng & Rafiei
+        layout); the paper's variants keep k filters."""
+        return 1 if self.is_counter else self.k
 
     @property
     def s_words(self) -> int:
@@ -200,6 +226,19 @@ class DedupConfig:
             if self.effective_layout != "planes":
                 raise ValueError("swbf only exists on the plane layout "
                                  "(layout='planes' or 'auto'; DESIGN §3.7)")
+        if self.variant in COUNTING_VARIANTS:
+            if not (1 <= self.count_bits <= 16):
+                raise ValueError("counting-sketch counter width count_bits "
+                                 "in [1, 16]")
+            if not (1 <= self.count_threshold <= (1 << self.count_bits) - 1):
+                raise ValueError(
+                    f"count_threshold must lie in [1, 2^count_bits - 1] = "
+                    f"[1, {(1 << self.count_bits) - 1}] — cells saturate "
+                    f"there, so a larger threshold can never fire")
+            if self.effective_layout != "planes":
+                raise ValueError(
+                    f"{self.variant} only exists on the plane layout "
+                    f"(layout='planes' or 'auto'; DESIGN §3.8)")
         if self.s < 8:
             raise ValueError("filter too small: raise memory_bits or lower k/shards")
         if not (0.0 < self.p_star < 1.0):
@@ -239,6 +278,10 @@ class DedupConfig:
         elif variant == "swbf":
             k = kw.pop("k", 3)
             kw.setdefault("window", 8)   # windowed dedup needs a window
+        elif variant in COUNTING_VARIANTS:
+            k = kw.pop("k", 4)           # count-min depth (rows-as-hashes)
+            if variant == "hh":
+                kw.setdefault("count_threshold", 8)   # "heavy" = >= 8 hits
         else:
             k = kw.pop("k", 2)  # paper settles on k=2 for BSBF/BSBFSD/RLBSBF
         return DedupConfig(variant=variant, memory_bits=memory_bits, k=k,

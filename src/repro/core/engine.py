@@ -40,8 +40,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import jit_cache_size
-from .batched import BatchResult, make_batched_step
+from .batched import BatchResult, make_batched_step, make_estimate_fn
 from .config import DedupConfig
+from .packed import unpack_cells
 from .state import FilterState, init_state
 from .variants import make_scan_step
 
@@ -59,6 +60,8 @@ class Dedup:
         self._batched_donated = jax.jit(self._step, donate_argnums=0)
         if cfg.effective_layout == "dense8":
             self._scan_step = make_scan_step(cfg)
+        if cfg.is_counter and cfg.effective_layout == "planes":
+            self._estimate = jax.jit(make_estimate_fn(cfg))
         self._stream = jax.jit(self._stream_impl, donate_argnums=0)
 
     # ------------------------------------------------------------------ //
@@ -140,6 +143,38 @@ class Dedup:
                 + jit_cache_size(self._batched_donated))
 
     # ------------------------------------------------------------------ //
+    def estimate(self, state: FilterState, keys: jnp.ndarray) -> jnp.ndarray:
+        """Serve-path frequency readout (counter-family, plane layout):
+        (B,) int32 count-min estimates — MIN over the k probed d-bit cells
+        (DESIGN.md §3.8). Read-only: no state change, no rng consumption,
+        so interactive callers can probe a state they keep. For cms the
+        estimate never under-counts while the probed cells are below the
+        2^d - 1 cap; for sbf/swbf it reads the decayed/windowed counters."""
+        if not hasattr(self, "_estimate"):
+            raise ValueError(
+                f"estimate() needs a counter-family variant on the plane "
+                f"layout (sbf/swbf/cms/hh); got {self.cfg.variant!r} on "
+                f"{self.cfg.effective_layout!r}")
+        return self._estimate(state, keys.astype(jnp.uint32))
+
+    def top_cells(self, state: FilterState, m: int = 16
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Heavy-load monitoring readout (counter-family, plane layout):
+        the ``m`` highest-valued cells as (cells (m,) i32, counts (m,) i32),
+        sorted descending (DESIGN.md §3.8). A cell's count upper-bounds the
+        total frequency of every key hashing into it, so for the hh sketch
+        these are the candidate heavy-hitter buckets StreamMetrics surfaces.
+        O(s) readout — a monitoring probe, not a hot-path op."""
+        if not (self.cfg.is_counter
+                and self.cfg.effective_layout == "planes"):
+            raise ValueError(
+                f"top_cells() needs a counter-family variant on the plane "
+                f"layout (sbf/swbf/cms/hh); got {self.cfg.variant!r} on "
+                f"{self.cfg.effective_layout!r}")
+        counts, cells = _top_cells_impl(state.bits, self.cfg.s, m)
+        return cells, counts
+
+    # ------------------------------------------------------------------ //
     def _stream_impl(self, state: FilterState, kb: jnp.ndarray,
                      vb: jnp.ndarray):
         def body(st, xs):
@@ -179,6 +214,13 @@ class Dedup:
         state, dups = jax.lax.scan(
             self._scan_step, state, keys.astype(jnp.uint32))
         return state, dups
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _top_cells_impl(bits: jnp.ndarray, s: int, m: int):
+    planes = bits if bits.ndim == 3 else bits[None]
+    values = unpack_cells(planes[:, 0, :], s)                 # (s,) i32
+    return jax.lax.top_k(values, m)                           # (counts, cells)
 
 
 @functools.lru_cache(maxsize=64)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "pack_bits", "unpack_bits", "split_pos", "probe_packed",
+    "probe_cell_values",
     "delta_from_sorted_positions", "probe_sorted_packed",
     "scatter_or", "scatter_andnot", "popcount", "popcount_words",
     "pack_cells", "unpack_cells", "planes_nonzero",
@@ -72,6 +73,20 @@ def probe_packed(words: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
     rows = jnp.arange(k, dtype=jnp.int32)
     got = words[rows, w_idx]                      # (..., k) gather per filter
     return ((got & mask) != 0).astype(jnp.uint8)
+
+
+def probe_cell_values(planes: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """planes (d, W), pos (..., k) cell positions -> (..., k) int32 cell
+    VALUES. One word gather per plane (d total), bit test, shift-OR into the
+    d-bit value — the value-probe op of the counting sketches (cms/hh
+    frequency estimates, DESIGN.md §3.8). At d == 1 this is the plain
+    membership probe."""
+    w_idx, mask = split_pos(pos)
+    vals = jnp.zeros(pos.shape, jnp.int32)
+    for p in range(planes.shape[0]):
+        bit = (planes[p][w_idx] & mask) != 0
+        vals = vals | (bit.astype(jnp.int32) << p)
+    return vals
 
 
 def _segmented_or(head: jnp.ndarray, vals: jnp.ndarray):

@@ -5,11 +5,12 @@
     counter value). Simple scatters; the reference layout.
   * "planes": d bit-planes of (k, W) uint32 words, 32 cells per lane word.
     For the 1-bit variants d == 1 and the plane axis is squeezed — (k, W),
-    bit-for-bit the historical packed layout. For the counter structures
-    (SBF, SWBF) d == bits_per_cell and the state is the full (d, 1, W)
-    stack: cell j's counter is sum_p plane[p] bit j << p. Probed via
-    multi-plane gather + mask, updated via carry/borrow chains of word ops
-    (see packed.py) or the Pallas kernels.
+    bit-for-bit the historical packed layout. For the counter-family
+    sketches (SBF, SWBF, and the cms/hh counting sketches, DESIGN.md §3.8)
+    d == bits_per_cell and the state is the full (d, 1, W) stack: cell j's
+    counter is sum_p plane[p] bit j << p. Probed via multi-plane gather +
+    mask, updated via carry/borrow chains of word ops (see packed.py) or
+    the Pallas kernels.
 
 ``position`` is the 1-indexed stream position ``i`` of the *next* element —
 RSBF's insert probability is s/i, so it must survive checkpoint/restart

@@ -42,6 +42,10 @@ class StreamMetrics:
     # silently wrap at int32
     _pending: list = dataclasses.field(default_factory=list)
     _pending_ovf: list = dataclasses.field(default_factory=list)
+    # heavy-hitter snapshot from the counting sketches (DESIGN.md §3.8):
+    # (cell, count) pairs from ``Dedup.top_cells`` — a monitoring readout,
+    # recorded whenever the caller chooses to probe, not per batch
+    heavy_hitters: Optional[list] = None
     _FOLD_EVERY = 512
 
     def update(self, reported_dup: np.ndarray, truth_dup: Optional[np.ndarray],
@@ -146,6 +150,14 @@ class StreamMetrics:
                 return i - window
         return None
 
+    def record_heavy_hitters(self, cells, counts) -> None:
+        """Snapshot the top-load cells from ``Dedup.top_cells`` (counting
+        sketches, DESIGN.md §3.8). Syncs to host — call at monitoring
+        cadence, not per ingest batch."""
+        self.heavy_hitters = [(int(c), int(v))
+                              for c, v in zip(np.asarray(cells),
+                                              np.asarray(counts))]
+
     def summary(self) -> dict:
         self._fold()
         loads = self._loads()
@@ -155,6 +167,7 @@ class StreamMetrics:
             "throughput_eps": self.throughput,
             "final_load": loads[-1] if loads else None,
             "convergence_batch": self.convergence_point(),
+            "heavy_hitters": self.heavy_hitters,
         }
 
 

@@ -1,14 +1,19 @@
 """Pallas TPU kernels for the dedup hot path.
 
-hashmix       — fused k-way murmur hashing (VPU elementwise)
-bloom_probe   — packed-filter gather + bit test, filter row VMEM-resident
-scatter_delta — compare-broadcast packed bit scatter (OR / AND-NOT deltas)
-fused_step    — the production path: probe + decide + ANDNOT + OR + load
-                delta in ONE pallas_call with the filter VMEM-resident and
-                aliased in place (selected via ``DedupConfig.backend=\"pallas\"``)
-fused_counter_step — the counter-plane twin for SBF: probe + saturating
-                decrement + set-to-Max + load delta in ONE pallas_call, all
-                d planes VMEM-resident and aliased in place (DESIGN.md §3.6)
+hashmix        — fused k-way murmur hashing (VPU elementwise)
+bloom_probe    — packed-filter gather + bit test, filter row VMEM-resident
+scatter_delta  — compare-broadcast packed bit scatter (OR / AND-NOT deltas)
+fused_template — the production path: ONE kernel generator that emits the
+                 single-launch fused ingest step (probe + decide + update +
+                 load delta, filter VMEM-resident and aliased in place) from
+                 a variant's ``SketchSpec`` — both the 1-bit bitset family
+                 and the d-bit-plane counter family (sbf/swbf/cms/hh), via
+                 ``DedupConfig.backend="pallas"`` (DESIGN.md §3.4/§3.8)
+common         — shared VMEM-budget guard, tiling and probe helpers
+fused_step / fused_counter_step — thin deprecation shims over the template
+                 generator, keeping the historical per-variant factories
+                 (``make_fused_batched_step``/``make_fused_counter_step``/
+                 ``make_fused_swbf_step``) importable
 
 ``ops`` holds the jitted wrappers (interpret=True off-TPU), ``ref`` the
 pure-jnp oracles the tests sweep against.
@@ -18,8 +23,10 @@ from . import ops, ref
 from .hashmix import hashmix
 from .bloom_probe import bloom_probe
 from .scatter_delta import scatter_delta
+from .fused_template import make_fused_step
 from .fused_step import make_fused_batched_step
 from .fused_counter_step import make_fused_counter_step
 
 __all__ = ["ops", "ref", "hashmix", "bloom_probe", "scatter_delta",
-           "make_fused_batched_step", "make_fused_counter_step"]
+           "make_fused_step", "make_fused_batched_step",
+           "make_fused_counter_step"]

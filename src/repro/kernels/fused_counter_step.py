@@ -1,241 +1,32 @@
-"""Pallas TPU kernels: single-launch fused counter steps (DESIGN.md
-§3.6/§3.7) — SBF's decay-and-refresh and SWBF's sliding-window
-increment/decrement, on the d-bit-plane cell layout.
-
-Each ``pallas_call`` performs, with all d counter bit-planes VMEM-resident:
-
-  1. probe        — gather one uint32 word per (element, probe) from EVERY
-                    plane, OR them (nonzero test), test the cell's bit
-                    (``_probe_all_nonzero`` — shared by both kernels);
-  2. decide       — duplicate verdict (all K probed cells nonzero; SWBF also
-                    ORs the intra-batch first-occurrence flags);
-  3. update       — SBF: borrow-chain saturating decrement of the random
-                    decrement-run count planes, then one ``(A & ~D) | I``
-                    set-to-Max pass. SWBF: borrow-chain decrement of the
-                    EXPIRING ring slot's count planes, then carry-chain
-                    saturating increment of the arriving batch's
-                    (``planes_saturating_sub/add`` — the SAME word algebra
-                    the jnp plane steps trace — single source of truth,
-                    bit-identical by construction);
-  4. load         — exact nonzero-cell delta from the tile's pre/post
-                    nonzero words (``popcount(post_nz) − popcount(pre_nz)``)
-                    while the tile is already in registers.
-
-The batch's events are reduced to word deltas OUTSIDE the kernel by
-``core.batched.sbf_event_deltas`` / ``swbf_event_deltas`` — that is
-O(B·P log(B·P)) event work over batch-sized buffers (sorting does not belong
-in a kernel); the kernel is the only code that touches the filter planes,
-and touches them exactly once (planes in, planes out,
-``input_output_aliases`` in place). The SWBF ring itself is engine state —
-the expiring slot's event list is re-expanded to (d, W) count planes
-outside the kernel (``core.batched.ring_expire_planes``, one event-sized
-scatter) and enters as a VMEM-resident input; the slot overwrite is jnp
-(``core.batched.ring_push``) under the stream scan's donation.
-
-Layout/tiling mirror ``fused_step.py``: whole (d, 1, W) plane stack
-VMEM-resident — the shared ``check_vmem_budget`` guard enforces
-(2d+1)·W·4 <= 8 MiB for SBF (planes + count planes + set delta) and
-3d·W·4 for SWBF (planes + expiring slot + arriving counts) — and the update
-sweeps W in tiles of TW <= 512.
-
-Off-TPU the kernels run in interpret mode and are validated bit-exactly
-against the jnp plane steps (and the dense8 reference / host window oracle)
-in tests/test_counter_planes.py and tests/test_window_dedup.py.
-"""
+"""Deprecation shim — the counter-family fused steps (SBF's
+decay-and-refresh §3.6, SWBF's sliding window §3.7) are now GENERATED from
+their ``SketchSpec`` by ``fused_template.make_fused_step`` (DESIGN.md
+§3.8). This module keeps the historical factories importable; the shared
+probe/VMEM helpers live in ``kernels.common``. New code should call the
+template generator directly."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-from ..core.batched import (BatchResult, draw_sbf_randomness, intra_batch_seen,
-                            ring_expire_planes, ring_push, sbf_event_deltas,
-                            sbf_planes_3d, swbf_event_deltas)
-from ..core.hashing import derive_seeds, hash_positions
-from ..core.packed import (planes_saturating_add, planes_saturating_sub,
-                           planes_set_value, popcount_words, split_pos)
-from ..core.state import FilterState
-from .fused_step import DEFAULT_TILE_W, _largest_tile, check_vmem_budget
-
-
-def _popcount_sum(x: jnp.ndarray) -> jnp.ndarray:
-    """Total set bits of a uint32 vector -> int32 scalar (traced in-kernel;
-    same word algebra as the jnp step by construction)."""
-    return popcount_words(x).sum()
-
-
-def _probe_all_nonzero(planes_ref, d: int, k: int, iw, im, base):
-    """Shared probe: per-plane row views + the all-K-cells-nonzero verdict
-    (OR of every plane's gathered word, bit test, AND over probes)."""
-    rows = [planes_ref[p, 0, :] for p in range(d)]
-    hit = base
-    for f in range(k):
-        got = rows[0][iw[:, f]]
-        for p in range(1, d):
-            got = got | rows[p][iw[:, f]]
-        hit = hit & ((got & im[:, f]) != 0)
-    return rows, hit
+from .common import (DEFAULT_TILE_W, check_vmem_budget,          # noqa: F401
+                     largest_tile as _largest_tile,
+                     popcount_sum as _popcount_sum,
+                     probe_all_nonzero as _probe_all_nonzero)
+from .fused_template import make_fused_step
 
 
 def make_fused_counter_step(cfg, *, tile_w: int = DEFAULT_TILE_W,
                             interpret: bool | None = None):
-    """BatchedStep for ``cfg.backend == "pallas"`` with SBF's counter planes
-    — same signature and bit-identical results as the jnp plane step."""
+    """Deprecated alias: the SBF counter-plane fused step from the sketch
+    template — same signature and bit-identical results as before."""
     cfg = cfg.validate()
     assert cfg.variant == "sbf" and cfg.is_planes, cfg
-    s, w = cfg.s, cfg.s_words
-    d, cmax = cfg.n_planes, cfg.sbf_max
-    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
-    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
-              if cfg.block_bits else None)
-    k = cfg.k
-    squeeze = d == 1
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-
-    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
-        b = keys.shape[0]
-        planes = sbf_planes_3d(state.bits)                       # (d, 1, W)
-        check_vmem_budget((2 * d + 1) * w * 4, "counter planes + deltas")
-        tw = _largest_tile(w, tile_w)
-        n_tiles = w // tw
-
-        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)  # (B, k)
-        iw, im = split_pos(pos)
-        rng, start = draw_sbf_randomness(cfg, state.rng, b)
-        ev = sbf_event_deltas(cfg, pos, start, valid)
-
-        def kernel(planes_ref, cnt_ref, set_ref, iw_ref, im_ref, valid_ref,
-                   load_ref, out_ref, dup_ref, load_out_ref):
-            iw_ = iw_ref[...]
-            im_ = im_ref[...]
-            valid_ = valid_ref[...] != 0
-            # --- probe: nonzero test = OR of every plane's gathered word -- //
-            rows, dup = _probe_all_nonzero(planes_ref, d, k, iw_, im_, valid_)
-            dup_ref[...] = dup.astype(jnp.int32)
-
-            # --- fused decrement + set-to-Max + load sweep ---------------- //
-            def tile_body(t, dload):
-                base = t * tw
-                a = jnp.stack([jax.lax.dynamic_slice(rows[p], (base,), (tw,))
-                               for p in range(d)])
-                c = jnp.stack(
-                    [jax.lax.dynamic_slice(cnt_ref[p, :], (base,), (tw,))
-                     for p in range(d)])
-                i = jax.lax.dynamic_slice(set_ref[...], (base,), (tw,))
-                r = planes_set_value(planes_saturating_sub(a, c), i, cmax)
-                pre_nz, post_nz = a[0], r[0]
-                for p in range(d):
-                    out_ref[p, 0, pl.ds(base, tw)] = r[p]
-                    if p:
-                        pre_nz = pre_nz | a[p]
-                        post_nz = post_nz | r[p]
-                return dload + _popcount_sum(post_nz) - _popcount_sum(pre_nz)
-
-            dload = jax.lax.fori_loop(0, n_tiles, tile_body, jnp.int32(0))
-            load_out_ref[0] = load_ref[0] + dload
-
-        new_planes, dup_i, new_load = pl.pallas_call(
-            kernel,
-            out_shape=[
-                jax.ShapeDtypeStruct((d, 1, w), jnp.uint32),
-                jax.ShapeDtypeStruct((b,), jnp.int32),
-                jax.ShapeDtypeStruct((1,), jnp.int32),
-            ],
-            input_output_aliases={0: 0},     # planes updated in place
-            interpret=interpret,
-        )(planes, ev.count_planes, ev.set_delta, iw, im,
-          valid.astype(jnp.int32), state.load)
-
-        bits = new_planes[0] if squeeze else new_planes
-        n_valid = valid.sum(dtype=jnp.int32)
-        new = FilterState(bits, state.position + n_valid, new_load, rng)
-        return new, BatchResult(dup=dup_i != 0, inserted=valid)
-
-    return step
+    return make_fused_step(cfg, tile_w=tile_w, interpret=interpret)
 
 
 def make_fused_swbf_step(cfg, *, tile_w: int = DEFAULT_TILE_W,
                          interpret: bool | None = None):
-    """BatchedStep for ``cfg.backend == "pallas"`` with SWBF's sliding
-    window (DESIGN.md §3.7) — same signature and bit-identical results
-    (state, ring, dup, load) as ``core.batched.make_swbf_planes_step``."""
+    """Deprecated alias: the SWBF sliding-window fused step from the sketch
+    template — same signature and bit-identical results as before."""
     cfg = cfg.validate()
     assert cfg.variant == "swbf" and cfg.is_planes, cfg
-    s, w = cfg.s, cfg.s_words
-    d, k, window = cfg.n_planes, cfg.k, cfg.window
-    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
-    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
-              if cfg.block_bits else None)
-    squeeze = d == 1
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-
-    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
-        b = keys.shape[0]
-        ring = state.ring
-        planes = sbf_planes_3d(state.bits)                       # (d, 1, W)
-        check_vmem_budget(3 * d * w * 4, "window planes + ring slot + deltas")
-        tw = _largest_tile(w, tile_w)
-        n_tiles = w // tw
-
-        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)  # (B, k)
-        iw, im = split_pos(pos)
-        seen = intra_batch_seen(keys, valid)
-        ev = swbf_event_deltas(cfg, pos, valid, ring.events.shape[-1])
-        _exp_events, _exp_head, expire = ring_expire_planes(cfg, ring)
-
-        def kernel(planes_ref, exp_ref, cnt_ref, iw_ref, im_ref, valid_ref,
-                   seen_ref, load_ref, out_ref, dup_ref, load_out_ref):
-            iw_ = iw_ref[...]
-            im_ = im_ref[...]
-            valid_ = valid_ref[...] != 0
-            # --- probe + decide: within-window iff all K cells nonzero ---- //
-            rows, hit = _probe_all_nonzero(planes_ref, d, k, iw_, im_,
-                                           jnp.ones_like(valid_))
-            dup_ref[...] = ((hit | (seen_ref[...] != 0))
-                            & valid_).astype(jnp.int32)
-
-            # --- fused expire-decrement + insert-increment + load sweep --- //
-            def tile_body(t, dload):
-                base = t * tw
-                a = jnp.stack([jax.lax.dynamic_slice(rows[p], (base,), (tw,))
-                               for p in range(d)])
-                e = jnp.stack(
-                    [jax.lax.dynamic_slice(exp_ref[p, :], (base,), (tw,))
-                     for p in range(d)])
-                c = jnp.stack(
-                    [jax.lax.dynamic_slice(cnt_ref[p, :], (base,), (tw,))
-                     for p in range(d)])
-                r = planes_saturating_add(planes_saturating_sub(a, e), c)
-                pre_nz, post_nz = a[0], r[0]
-                for p in range(d):
-                    out_ref[p, 0, pl.ds(base, tw)] = r[p]
-                    if p:
-                        pre_nz = pre_nz | a[p]
-                        post_nz = post_nz | r[p]
-                return dload + _popcount_sum(post_nz) - _popcount_sum(pre_nz)
-
-            dload = jax.lax.fori_loop(0, n_tiles, tile_body, jnp.int32(0))
-            load_out_ref[0] = load_ref[0] + dload
-
-        new_planes, dup_i, new_load = pl.pallas_call(
-            kernel,
-            out_shape=[
-                jax.ShapeDtypeStruct((d, 1, w), jnp.uint32),
-                jax.ShapeDtypeStruct((b,), jnp.int32),
-                jax.ShapeDtypeStruct((1,), jnp.int32),
-            ],
-            input_output_aliases={0: 0},     # planes updated in place
-            interpret=interpret,
-        )(planes, expire, ev.count_planes, iw, im,
-          valid.astype(jnp.int32), seen.astype(jnp.int32), state.load)
-
-        bits = new_planes[0] if squeeze else new_planes
-        n_valid = valid.sum(dtype=jnp.int32)
-        new = FilterState(bits, state.position + n_valid, new_load,
-                          state.rng, ring_push(ring, ev, window))
-        return new, BatchResult(dup=dup_i != 0, inserted=valid)
-
-    return step
+    return make_fused_step(cfg, tile_w=tile_w, interpret=interpret)

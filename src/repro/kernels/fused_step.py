@@ -1,211 +1,32 @@
-"""Pallas TPU kernel: single-launch fused dedup step (DESIGN.md §3.4).
-
-One ``pallas_call`` performs, with the packed filter (k, W) VMEM-resident:
-
-  1. probe     — gather one uint32 word per (element, filter), test the bit;
-  2. decide    — the *shared* per-variant insert/delete logic from
-                 ``repro.core.batched.make_decision_fn``, traced inside the
-                 kernel (single source of truth — bit-identical to the jnp
-                 backend by construction);
-  3. ANDNOT    — clear the chosen deletion bits (compare-broadcast delta);
-  4. OR        — set the insertion bits (insertions win, as in the jnp path);
-  5. load      — exact per-row load delta from the tile's delta words
-                 (``popcount(I & ~A) - popcount(A & D & ~I)``), accumulated
-                 while the tile is already in registers — zero extra traffic.
-
-The jnp backend pays three HBM round trips over the filter per batch (probe
-gather, ANDNOT scatter, OR scatter); this kernel pays one (row in, row out),
-and ``input_output_aliases`` writes the filter in place.
-
-Layout/tiling (DESIGN.md §3.4):
-  * whole (k, W) filter VMEM-resident — wrapper enforces k·W·4 <= 8 MiB
-    (larger filters shard across devices first, repro.dedup.sharded);
-  * the update sweeps W in tiles of TW, and within each tile accumulates the
-    OR/ANDNOT deltas over batch chunks of TBC via broadcast-compare + tree-OR
-    (transient TBC·TW·4 <= 2 MiB at the defaults);
-  * per-batch cost is O(B·W) VPU compares — profitable when W per shard is
-    small (production sharding regime) or the layout is blocked (§3.3).
-
-Off-TPU the kernel runs in interpret mode and is validated bit-exactly
-against the jnp packed backend in tests/test_fused_step.py.
-
-This kernel serves the 1-bit variants (single-plane layout); SBF's counter
-planes have a twin with the same contracts in ``fused_counter_step.py``
-(DESIGN.md §3.6).
-"""
+"""Deprecation shim — the 1-bit fused step is now GENERATED from the
+variant's ``SketchSpec`` by ``fused_template.make_fused_step`` (DESIGN.md
+§3.4/§3.8). This module keeps the historical import surface working:
+``make_fused_batched_step`` and the VMEM/tiling helpers that used to be
+defined here (now in ``kernels.common``). New code should call the template
+generator directly."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-from ..core.batched import (BatchRandomness, BatchResult, draw_randomness,
-                            intra_batch_seen, make_decision_fn)
-from ..core.hashing import derive_seeds, hash_positions
-from ..core.packed import split_pos
-from ..core.state import FilterState
-
-DEFAULT_TILE_W = 512
-DEFAULT_CHUNK_B = 1024
-VMEM_FILTER_BYTES_LIMIT = 8 * 1024 * 1024
-
-
-def check_vmem_budget(nbytes: int, what: str) -> None:
-    """Shared guard for every fused kernel (this one and the counter/window
-    kernels in fused_counter_step.py): the filter-resident working set must
-    fit the VMEM budget — larger filters shard across devices first
-    (repro.dedup.sharded)."""
-    if nbytes > VMEM_FILTER_BYTES_LIMIT:
-        raise ValueError(
-            f"{what} {nbytes} B exceeds the {VMEM_FILTER_BYTES_LIMIT} B VMEM "
-            f"budget for the fused step — shard the filter "
-            f"(repro.dedup.sharded) first")
-
-
-def _popcount_sum(x: jnp.ndarray) -> jnp.ndarray:
-    """Total set bits of a uint32 vector -> int32 scalar."""
-    x = x - ((x >> 1) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
-    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    x = (x * jnp.uint32(0x01010101)) >> 24
-    return x.astype(jnp.int32).sum()
-
-
-def _chunk_or(w_idx: jnp.ndarray, masks: jnp.ndarray, lane: jnp.ndarray
-              ) -> jnp.ndarray:
-    """OR-union of single-bit masks onto a word tile: (C,) idx/mask vs (TW,)
-    lane iota -> (TW,) uint32. C is a power of two (tree-OR)."""
-    eq = w_idx[:, None] == lane[None, :]
-    x = jnp.where(eq, masks[:, None], jnp.uint32(0))
-    while x.shape[0] > 1:
-        half = x.shape[0] // 2
-        x = x[:half] | x[half:]
-    return x[0]
-
-
-def _largest_tile(w: int, limit: int) -> int:
-    tw = min(limit, w)
-    while w % tw:
-        tw -= 1
-    return tw
+from .common import (DEFAULT_CHUNK_B, DEFAULT_TILE_W,            # noqa: F401
+                     VMEM_FILTER_BYTES_LIMIT, check_vmem_budget,
+                     largest_tile as _largest_tile,
+                     popcount_sum as _popcount_sum)
+from .common import chunk_or as _chunk_or                        # noqa: F401
+from .fused_template import make_fused_step
 
 
 def make_fused_batched_step(cfg, *, tile_w: int = DEFAULT_TILE_W,
                             chunk_b: int = DEFAULT_CHUNK_B,
                             interpret: bool | None = None):
-    """BatchedStep for ``cfg.backend == "pallas"`` — same signature and
-    bit-identical results as the jnp packed step."""
+    """Deprecated alias: the bitset-family fused step from the sketch
+    template — same signature and bit-identical results as before."""
     cfg = cfg.validate()
-    chunk_b = 1 << max(3, chunk_b - 1).bit_length()   # tree-OR needs pow2
-    s, k = cfg.s, cfg.k
-    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
-    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
-              if cfg.block_bits else None)
-    decide = make_decision_fn(cfg)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-
-    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
-        b = keys.shape[0]
-        words = state.bits
-        k_, w = words.shape
-        check_vmem_budget(k_ * w * 4, "packed filter")
-        tw = _largest_tile(w, tile_w)
-        n_tiles = w // tw
-
-        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)  # (B, k)
-        iw, im = split_pos(pos)
-        seen = intra_batch_seen(keys, valid)
-        i_t = state.position + jnp.arange(b, dtype=jnp.int32)
-        rng, rnd = draw_randomness(cfg, state.rng, b)
-        dw, dm = split_pos(rnd.del_pos)
-
-        # pad the batch to a power-of-two chunk multiple; padded lanes carry
-        # sentinel word index W (matches no lane) and valid=0
-        tbc = chunk_b if b >= chunk_b else max(8, 1 << (b - 1).bit_length())
-        bp = -(-b // tbc) * tbc
-        padb = bp - b
-
-        def pad1(x, v):
-            return jnp.pad(x, (0, padb), constant_values=v)
-
-        def pad2(x, v):
-            return jnp.pad(x, ((0, padb), (0, 0)), constant_values=v)
-
-        iw_p, im_p = pad2(iw, w), pad2(im, 0)
-        dw_p, dm_p = pad2(dw, w), pad2(dm, 0)
-        valid_p = pad1(valid.astype(jnp.int32), 0)
-        seen_p = pad1(seen.astype(jnp.int32), 0)
-        it_p = pad1(i_t, 1)
-        ub_p = pad1(rnd.u_bern, 0)
-        ua_p = pad2(rnd.u_aux, 0)
-        wh_p = pad1(rnd.which, 0)
-
-        def kernel(words_ref, iw_ref, im_ref, dw_ref, dm_ref, valid_ref,
-                   seen_ref, ub_ref, ua_ref, wh_ref, it_ref, load_ref,
-                   out_words_ref, dup_ref, ins_ref, load_out_ref):
-            iw_ = iw_ref[...]
-            im_ = im_ref[...]
-            dw_ = dw_ref[...]
-            dm_ = dm_ref[...]
-            valid_ = valid_ref[...] != 0
-            seen_ = seen_ref[...] != 0
-            load_ = load_ref[...]
-            # --- probe: every row's pre-update words, gathered in VMEM ---- //
-            rows = [words_ref[f, :] for f in range(k)]
-            vals = jnp.stack(
-                [((rows[f][iw_[:, f]] & im_[:, f]) != 0).astype(jnp.uint8)
-                 for f in range(k)], axis=1)
-            # --- decide: shared variant logic (bit-identical to jnp path) - //
-            krnd = BatchRandomness(del_pos=dw_, u_bern=ub_ref[...],
-                                   u_aux=ua_ref[...], which=wh_ref[...])
-            dup, insert, del_mask = decide(vals, valid_, seen_, it_ref[...],
-                                           load_, krnd)
-            dup_ref[...] = dup.astype(jnp.int32)
-            ins_ref[...] = insert.astype(jnp.int32)
-            # --- fused ANDNOT + OR sweep, one pass over the filter -------- //
-            for f in range(k):
-                iwf = jnp.where(insert, iw_[:, f], w)
-                dwf = jnp.where(del_mask[:, f], dw_[:, f], w)
-                imf, dmf = im_[:, f], dm_[:, f]
-                row = rows[f]
-
-                def tile_body(t, dload, f=f, iwf=iwf, dwf=dwf, imf=imf,
-                              dmf=dmf, row=row):
-                    base = t * tw
-                    lane = base + jax.lax.iota(jnp.int32, tw)
-                    a = jax.lax.dynamic_slice(row, (base,), (tw,))
-                    delta_i = jnp.zeros((tw,), jnp.uint32)
-                    delta_d = jnp.zeros((tw,), jnp.uint32)
-                    for c in range(bp // tbc):
-                        sl = slice(c * tbc, (c + 1) * tbc)
-                        delta_i = delta_i | _chunk_or(iwf[sl], imf[sl], lane)
-                        delta_d = delta_d | _chunk_or(dwf[sl], dmf[sl], lane)
-                    out_words_ref[f, pl.ds(base, tw)] = (a & ~delta_d) | delta_i
-                    # exact load delta, from words already in registers
-                    gained = _popcount_sum(delta_i & ~a)
-                    lost = _popcount_sum(a & delta_d & ~delta_i)
-                    return dload + gained - lost
-
-                dload = jax.lax.fori_loop(0, n_tiles, tile_body, jnp.int32(0))
-                load_out_ref[f] = load_[f] + dload
-
-        new_words, dup_i, ins_i, new_load = pl.pallas_call(
-            kernel,
-            out_shape=[
-                jax.ShapeDtypeStruct((k, w), jnp.uint32),
-                jax.ShapeDtypeStruct((bp,), jnp.int32),
-                jax.ShapeDtypeStruct((bp,), jnp.int32),
-                jax.ShapeDtypeStruct((k,), jnp.int32),
-            ],
-            input_output_aliases={0: 0},     # filter updated in place
-            interpret=interpret,
-        )(words, iw_p, im_p, dw_p, dm_p, valid_p, seen_p, ub_p, ua_p, wh_p,
-          it_p, state.load)
-
-        n_valid = valid.sum(dtype=jnp.int32)
-        new = FilterState(new_words, state.position + n_valid, new_load, rng)
-        return new, BatchResult(dup=dup_i[:b] != 0, inserted=ins_i[:b] != 0)
-
-    return step
+    from ..core.sketch import get_spec
+    spec = get_spec(cfg.variant)
+    if spec.family != "bitset":
+        raise ValueError(
+            f"make_fused_batched_step serves the 1-bit (bitset) variants; "
+            f"{cfg.variant!r} is counter-family — use "
+            f"fused_template.make_fused_step")
+    return make_fused_step(cfg, spec, tile_w=tile_w, chunk_b=chunk_b,
+                           interpret=interpret)

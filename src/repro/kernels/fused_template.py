@@ -1,0 +1,329 @@
+"""Pallas TPU kernel generator: the fused single-launch ingest step, emitted
+from a ``SketchSpec`` (DESIGN.md §3.4/§3.6/§3.7/§3.8).
+
+ONE generator replaces the three hand-written kernels that used to live in
+``fused_step.py`` / ``fused_counter_step.py`` (now deprecation shims). Per
+family it emits one ``pallas_call`` that performs, with the whole filter
+VMEM-resident and written in place (``input_output_aliases``):
+
+* ``bitset`` (rsbf/bsbf/bsbfsd/rlbsbf — packed (k, W) rows):
+  probe gather -> the spec's decision fn (``make_decision_fn``, traced
+  inside the kernel) -> fused ``(A & ~D) | I`` tile sweep with the exact
+  per-row load delta from the tile's delta words.
+* ``counter`` (sbf/swbf/cms/hh — (d, 1, W) bit-plane cells): probe (nonzero
+  bit, or the full d-bit cell value for the counting sketches) -> the
+  spec's decision fn -> fused subtract-then-(set|add) tile sweep over the
+  event word deltas built OUTSIDE the kernel by the spec's event op
+  (sorting does not belong in a kernel), with the exact nonzero-cell load
+  delta from the tile's pre/post nonzero words.
+
+Bit-identity with the jnp steps is by construction, not by porting: the
+kernel traces the SAME decision fn and the SAME plane algebra
+(``planes_saturating_sub/add``, ``planes_set_value``) as
+``core.batched.make_templated_step``, and probes in the SAME dtype the jnp
+step feeds its decide (bool for the nonzero probe, int32 cell values for
+the value probe). Engine-side state that is not filter state — the rng
+thread, the swbf ring slot overwrite — stays jnp outside the kernel.
+
+Layout/tiling (DESIGN.md §3.4): the shared ``check_vmem_budget`` guard
+bounds the VMEM-resident working set (filter + event operands) at 8 MiB —
+larger filters shard across devices first (repro.dedup.sharded) — and the
+update sweeps W in tiles of TW <= 512. Off-TPU the kernels run in interpret
+mode and are validated bit-exactly against the jnp steps in
+tests/test_sketch_template.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.batched import (BatchRandomness, BatchResult, intra_batch_seen,
+                            ring_push, sbf_planes_3d)
+from ..core.hashing import derive_seeds, hash_positions
+from ..core.packed import (planes_saturating_add, planes_saturating_sub,
+                           planes_set_value, split_pos)
+from ..core.state import FilterState
+from .common import (DEFAULT_CHUNK_B, DEFAULT_TILE_W, check_vmem_budget,
+                     chunk_or, largest_tile, popcount_sum)
+
+
+def make_fused_step(cfg, spec=None, *, tile_w: int = DEFAULT_TILE_W,
+                    chunk_b: int = DEFAULT_CHUNK_B,
+                    interpret: bool | None = None):
+    """BatchedStep for ``cfg.backend == "pallas"`` — generated from the
+    variant's ``SketchSpec`` (or an explicit ``spec``), same signature and
+    bit-identical results as the jnp step from the same spec. ``chunk_b``
+    applies to the bitset family only (the counter kernels consume
+    pre-reduced word deltas, not per-element scatters)."""
+    cfg = cfg.validate()
+    if spec is None:
+        from ..core.sketch import get_spec
+        spec = get_spec(cfg.variant)
+    if spec.family == "counter":
+        if not cfg.is_planes:
+            raise ValueError(
+                f"the fused {cfg.variant} kernel needs the bit-plane layout "
+                f"(cfg.layout='planes'); got {cfg.effective_layout!r}")
+        return _make_counter_kernel_step(cfg, spec, tile_w=tile_w,
+                                         interpret=interpret)
+    return _make_bitset_kernel_step(cfg, spec, tile_w=tile_w,
+                                    chunk_b=chunk_b, interpret=interpret)
+
+
+# ---------------- counter family (d-bit plane cells) --------------------- //
+
+def _make_counter_kernel_step(cfg, spec, *, tile_w: int,
+                              interpret: bool | None):
+    s, w = cfg.s, cfg.s_words
+    d, k = cfg.n_planes, cfg.k
+    # set-to-Max writes the sketch's counter ceiling (sbf_max), which may sit
+    # below the plane capacity 2^d - 1
+    cmax = cfg.sbf_max
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    squeeze = d == 1
+    decide = spec.make_decide(cfg)
+    events_fn = spec.make_events(cfg)
+    has_sub, set_mode = spec.has_sub, spec.combine == "set"
+    uses_seen, value_probe = spec.uses_seen, spec.probe == "value"
+    # VMEM working set: the planes, the subtract planes if the sketch decays,
+    # and the insert operand — one OR word row for set-to-Max, d count planes
+    # for saturating add (sbf: (2d+1)·W·4, swbf: 3d·W·4, cms/hh: 2d·W·4)
+    vmem_words = d + (d if has_sub else 0) + (1 if set_mode else d)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+        b = keys.shape[0]
+        planes = sbf_planes_3d(state.bits)                       # (d, 1, W)
+        check_vmem_budget(vmem_words * w * 4,
+                          f"{cfg.variant} planes + event deltas")
+        tw = largest_tile(w, tile_w)
+        n_tiles = w // tw
+
+        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)  # (B, k)
+        iw, im = split_pos(pos)
+        seen = intra_batch_seen(keys, valid) if uses_seen else None
+        if spec.draw is not None:
+            rng, rnd = spec.draw(cfg, state.rng, b)
+        else:
+            rng, rnd = state.rng, None
+        ev = events_fn(state, pos, valid, rnd)
+
+        operands = [planes]
+        if has_sub:
+            operands.append(ev.sub_planes)
+        operands.append(ev.set_delta if set_mode else ev.add_planes)
+        operands += [iw, im, valid.astype(jnp.int32)]
+        if uses_seen:
+            operands.append(seen.astype(jnp.int32))
+        operands.append(state.load)
+
+        def kernel(*refs):
+            it = iter(refs)
+            planes_ref = next(it)
+            sub_ref = next(it) if has_sub else None
+            ins_ref = next(it)
+            iw_ref, im_ref, valid_ref = next(it), next(it), next(it)
+            seen_ref = next(it) if uses_seen else None
+            load_ref = next(it)
+            out_ref, dup_ref, load_out_ref = next(it), next(it), next(it)
+
+            iw_ = iw_ref[...]
+            im_ = im_ref[...]
+            valid_ = valid_ref[...] != 0
+            rows = [planes_ref[p, 0, :] for p in range(d)]
+            # --- probe, in the SAME dtype the jnp step feeds its decide --- //
+            cols = []
+            for f in range(k):
+                if value_probe:
+                    # d-bit cell value: per-plane bit test, shift-OR
+                    v = jnp.zeros((iw_.shape[0],), jnp.int32)
+                    for p in range(d):
+                        bit = (rows[p][iw_[:, f]] & im_[:, f]) != 0
+                        v = v | (bit.astype(jnp.int32) << p)
+                    cols.append(v)
+                else:
+                    # nonzero test: OR of every plane's gathered word
+                    got = rows[0][iw_[:, f]]
+                    for p in range(1, d):
+                        got = got | rows[p][iw_[:, f]]
+                    cols.append((got & im_[:, f]) != 0)
+            vals = jnp.stack(cols, axis=1)
+            # --- decide: shared spec logic (bit-identical to jnp path) ---- //
+            seen_ = (seen_ref[...] != 0) if uses_seen else None
+            dup_ref[...] = decide(vals, valid_, seen_).astype(jnp.int32)
+
+            # --- fused subtract + set/add + load sweep -------------------- //
+            def tile_body(t, dload):
+                base = t * tw
+                a = jnp.stack([jax.lax.dynamic_slice(rows[p], (base,), (tw,))
+                               for p in range(d)])
+                r = a
+                if has_sub:
+                    e = jnp.stack(
+                        [jax.lax.dynamic_slice(sub_ref[p, :], (base,), (tw,))
+                         for p in range(d)])
+                    r = planes_saturating_sub(r, e)
+                if set_mode:
+                    i = jax.lax.dynamic_slice(ins_ref[...], (base,), (tw,))
+                    r = planes_set_value(r, i, cmax)
+                else:
+                    c = jnp.stack(
+                        [jax.lax.dynamic_slice(ins_ref[p, :], (base,), (tw,))
+                         for p in range(d)])
+                    r = planes_saturating_add(r, c)
+                pre_nz, post_nz = a[0], r[0]
+                for p in range(d):
+                    out_ref[p, 0, pl.ds(base, tw)] = r[p]
+                    if p:
+                        pre_nz = pre_nz | a[p]
+                        post_nz = post_nz | r[p]
+                return dload + popcount_sum(post_nz) - popcount_sum(pre_nz)
+
+            dload = jax.lax.fori_loop(0, n_tiles, tile_body, jnp.int32(0))
+            load_out_ref[0] = load_ref[0] + dload
+
+        new_planes, dup_i, new_load = pl.pallas_call(
+            kernel,
+            out_shape=[
+                jax.ShapeDtypeStruct((d, 1, w), jnp.uint32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((1,), jnp.int32),
+            ],
+            input_output_aliases={0: 0},     # planes updated in place
+            interpret=interpret,
+        )(*operands)
+
+        bits = new_planes[0] if squeeze else new_planes
+        ring = state.ring
+        if ev.ring_payload is not None:
+            # the ring is engine state, not kernel state — jnp on purpose
+            ring = ring_push(ring, ev.ring_payload, cfg.window)
+        n_valid = valid.sum(dtype=jnp.int32)
+        new = FilterState(bits, state.position + n_valid, new_load, rng, ring)
+        return new, BatchResult(dup=dup_i != 0, inserted=valid)
+
+    return step
+
+
+# ---------------- bitset family (packed 1-bit rows) ---------------------- //
+
+def _make_bitset_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
+                             interpret: bool | None):
+    chunk_b = 1 << max(3, chunk_b - 1).bit_length()   # tree-OR needs pow2
+    s, k = cfg.s, cfg.k
+    seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
+    bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
+              if cfg.block_bits else None)
+    decide = spec.make_decide(cfg)
+    draw = spec.draw
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+        b = keys.shape[0]
+        words = state.bits
+        k_, w = words.shape
+        check_vmem_budget(k_ * w * 4, "packed filter")
+        tw = largest_tile(w, tile_w)
+        n_tiles = w // tw
+
+        pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)  # (B, k)
+        iw, im = split_pos(pos)
+        seen = intra_batch_seen(keys, valid)
+        i_t = state.position + jnp.arange(b, dtype=jnp.int32)
+        rng, rnd = draw(cfg, state.rng, b)
+        dw, dm = split_pos(rnd.del_pos)
+
+        # pad the batch to a power-of-two chunk multiple; padded lanes carry
+        # sentinel word index W (matches no lane) and valid=0
+        tbc = chunk_b if b >= chunk_b else max(8, 1 << (b - 1).bit_length())
+        bp = -(-b // tbc) * tbc
+        padb = bp - b
+
+        def pad1(x, v):
+            return jnp.pad(x, (0, padb), constant_values=v)
+
+        def pad2(x, v):
+            return jnp.pad(x, ((0, padb), (0, 0)), constant_values=v)
+
+        iw_p, im_p = pad2(iw, w), pad2(im, 0)
+        dw_p, dm_p = pad2(dw, w), pad2(dm, 0)
+        valid_p = pad1(valid.astype(jnp.int32), 0)
+        seen_p = pad1(seen.astype(jnp.int32), 0)
+        it_p = pad1(i_t, 1)
+        ub_p = pad1(rnd.u_bern, 0)
+        ua_p = pad2(rnd.u_aux, 0)
+        wh_p = pad1(rnd.which, 0)
+
+        def kernel(words_ref, iw_ref, im_ref, dw_ref, dm_ref, valid_ref,
+                   seen_ref, ub_ref, ua_ref, wh_ref, it_ref, load_ref,
+                   out_words_ref, dup_ref, ins_ref, load_out_ref):
+            iw_ = iw_ref[...]
+            im_ = im_ref[...]
+            dw_ = dw_ref[...]
+            dm_ = dm_ref[...]
+            valid_ = valid_ref[...] != 0
+            seen_ = seen_ref[...] != 0
+            load_ = load_ref[...]
+            # --- probe: every row's pre-update words, gathered in VMEM ---- //
+            rows = [words_ref[f, :] for f in range(k)]
+            vals = jnp.stack(
+                [((rows[f][iw_[:, f]] & im_[:, f]) != 0).astype(jnp.uint8)
+                 for f in range(k)], axis=1)
+            # --- decide: shared spec logic (bit-identical to jnp path) ---- //
+            krnd = BatchRandomness(del_pos=dw_, u_bern=ub_ref[...],
+                                   u_aux=ua_ref[...], which=wh_ref[...])
+            dup, insert, del_mask = decide(vals, valid_, seen_, it_ref[...],
+                                           load_, krnd)
+            dup_ref[...] = dup.astype(jnp.int32)
+            ins_ref[...] = insert.astype(jnp.int32)
+            # --- fused ANDNOT + OR sweep, one pass over the filter -------- //
+            for f in range(k):
+                iwf = jnp.where(insert, iw_[:, f], w)
+                dwf = jnp.where(del_mask[:, f], dw_[:, f], w)
+                imf, dmf = im_[:, f], dm_[:, f]
+                row = rows[f]
+
+                def tile_body(t, dload, f=f, iwf=iwf, dwf=dwf, imf=imf,
+                              dmf=dmf, row=row):
+                    base = t * tw
+                    lane = base + jax.lax.iota(jnp.int32, tw)
+                    a = jax.lax.dynamic_slice(row, (base,), (tw,))
+                    delta_i = jnp.zeros((tw,), jnp.uint32)
+                    delta_d = jnp.zeros((tw,), jnp.uint32)
+                    for c in range(bp // tbc):
+                        sl = slice(c * tbc, (c + 1) * tbc)
+                        delta_i = delta_i | chunk_or(iwf[sl], imf[sl], lane)
+                        delta_d = delta_d | chunk_or(dwf[sl], dmf[sl], lane)
+                    out_words_ref[f, pl.ds(base, tw)] = (a & ~delta_d) | delta_i
+                    # exact load delta, from words already in registers
+                    gained = popcount_sum(delta_i & ~a)
+                    lost = popcount_sum(a & delta_d & ~delta_i)
+                    return dload + gained - lost
+
+                dload = jax.lax.fori_loop(0, n_tiles, tile_body, jnp.int32(0))
+                load_out_ref[f] = load_[f] + dload
+
+        new_words, dup_i, ins_i, new_load = pl.pallas_call(
+            kernel,
+            out_shape=[
+                jax.ShapeDtypeStruct((k, w), jnp.uint32),
+                jax.ShapeDtypeStruct((bp,), jnp.int32),
+                jax.ShapeDtypeStruct((bp,), jnp.int32),
+                jax.ShapeDtypeStruct((k,), jnp.int32),
+            ],
+            input_output_aliases={0: 0},     # filter updated in place
+            interpret=interpret,
+        )(words, iw_p, im_p, dw_p, dm_p, valid_p, seen_p, ub_p, ua_p, wh_p,
+          it_p, state.load)
+
+        n_valid = valid.sum(dtype=jnp.int32)
+        new = FilterState(new_words, state.position + n_valid, new_load, rng)
+        return new, BatchResult(dup=dup_i[:b] != 0, inserted=ins_i[:b] != 0)
+
+    return step

@@ -19,6 +19,9 @@ Contracts pinned here:
   * plane arithmetic (pack/unpack, saturating inc/dec) matches integer
     semantics exactly (deterministic sweep here; hypothesis round-trip in
     tests/test_property.py).
+
+Step-level jnp/pallas ragged-valid parity moved to the spec-driven grid in
+tests/test_sketch_template.py (DESIGN.md §3.8).
 """
 
 import jax
@@ -77,28 +80,6 @@ def test_sbf_planes_and_pallas_bit_identical_to_dense8(sbf_max):
         for st in (spl, spa):
             assert np.array_equal(np.asarray(s8.load), np.asarray(st.load))
             assert int(s8.position) == int(st.position)
-
-
-def test_sbf_planes_single_steps_with_ragged_valid():
-    """Step-level parity including the ``inserted`` report and valid masks."""
-    d8, dpl, dpa = _engines(**SMALL)
-    s8, spl, spa = d8.init(), dpl.init(), dpa.init()
-    keys = jnp.asarray(np.random.default_rng(3)
-                       .integers(0, 120, 256 * 4).astype(np.uint32))
-    for i in range(4):
-        kb = keys[i * 256:(i + 1) * 256]
-        valid = jnp.arange(256) < (256 if i < 3 else 61)
-        s8, r8 = d8.process(s8, kb, valid)
-        spl, rpl = dpl.process(spl, kb, valid)
-        spa, rpa = dpa.process(spa, kb, valid)
-        assert np.array_equal(np.asarray(r8.dup), np.asarray(rpl.dup))
-        assert np.array_equal(np.asarray(rpl.dup), np.asarray(rpa.dup))
-        assert np.array_equal(np.asarray(r8.inserted), np.asarray(rpl.inserted))
-        assert np.array_equal(_cells(spl, d8.cfg.s),
-                              np.asarray(s8.bits, np.int32))
-        assert np.array_equal(np.asarray(spl.bits), np.asarray(spa.bits))
-        assert np.array_equal(np.asarray(s8.load), np.asarray(spl.load))
-        assert np.array_equal(np.asarray(spl.load), np.asarray(spa.load))
 
 
 def test_sbf_batch1_bit_identical_to_oracle():

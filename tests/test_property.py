@@ -134,3 +134,41 @@ def test_controlled_stream_exact_distinct_fraction(n, frac, seed):
     n_distinct = len(np.unique(keys))
     assert n_distinct == max(1, round(n * frac))
     assert (~truth).sum() == n_distinct   # truth marks duplicates exactly
+
+
+# ------------------------------------------------------ count-min (§3.8) //
+@given(st.lists(st.integers(0, 30), min_size=32, max_size=400),
+       st.integers(0, 7))
+@_SET
+def test_cms_estimate_is_sound_upper_bound(keys, seed):
+    """Count-min soundness on arbitrary small streams: every arrival
+    increments all k probed cells, so below the 2^d - 1 cell cap the
+    estimate (min over the k cells) is >= the key's true arrival count."""
+    from repro.core import Dedup, DedupConfig
+    from repro.core.engine import get_engine
+    eng = get_engine(DedupConfig.for_variant(
+        "cms", memory_bits=1 << 13, batch_size=64, seed=seed))
+    arr = np.asarray(keys, np.uint32)
+    true = np.bincount(arr, minlength=31)
+    hypothesis.assume(true.max() < (1 << eng.cfg.count_bits) - 1)
+    st_, _ = eng.run_stream(eng.init(), jnp.asarray(arr))
+    est = np.asarray(eng.estimate(st_, jnp.arange(31, dtype=jnp.uint32)))
+    assert (est >= true).all()
+
+
+@given(st.integers(0, 5))
+@_SET
+def test_cms_error_bounded_at_paper_scale_width(seed):
+    """The classic CM error bound, checked at a paper-scale width: with
+    s >> k * n_arrivals the expected collision mass per cell is << 1, so
+    the average over-estimate across keys stays below 1 count."""
+    from repro.core import DedupConfig
+    from repro.core.engine import get_engine
+    eng = get_engine(DedupConfig.for_variant(
+        "cms", memory_bits=1 << 21, batch_size=256, seed=seed))
+    arr = np.random.default_rng(seed).integers(0, 500, 4096).astype(np.uint32)
+    true = np.bincount(arr, minlength=500)
+    st_, _ = eng.run_stream(eng.init(), jnp.asarray(arr))
+    est = np.asarray(eng.estimate(st_, jnp.arange(500, dtype=jnp.uint32)))
+    assert (est >= true).all()
+    assert float((est - true).mean()) < 1.0
