@@ -6,6 +6,7 @@
     PYTHONPATH=src python scripts/bench_check.py --counter [--tol 0.35]
     PYTHONPATH=src python scripts/bench_check.py --rebalance
     PYTHONPATH=src python scripts/bench_check.py --template
+    PYTHONPATH=src python scripts/bench_check.py --pipeline
     PYTHONPATH=src python scripts/bench_check.py --all
 
 Exit codes: 0 = within tolerance (or improved), 1 = regression, 2 = missing
@@ -56,9 +57,18 @@ the sharded tolerance (async wall-clock on a shared CPU jitters).
 ``python -m benchmarks.template_throughput``): every templated step that
 replaced a hand-written one holds >= 95% of the frozen pre-template row's
 elems/s (DESIGN §3.8), and the cms/hh counting rows are present.
+
+``--pipeline`` validates the committed BENCH_pipeline.json (emitted by
+``python -m benchmarks.pipeline_throughput``) against the DESIGN §4.5
+acceptance bar: pipelined sharded ``run_stream`` >= 1.25x serial elems/s
+at 8 simulated devices on the paper-scale static row, plus the
+deterministic digest grid — pipelined == serial, kernel_accumulate
+on == off, and elastic == the 1-device oracle, on both backends.
+
 ``--all`` runs every validate-only check (sharded/counter/window/
-rebalance/serving/template) in one call — the CI gate; worst exit code
-wins. The plain re-measuring mode stays a separate local command.
+rebalance/serving/template/pipeline) in one call — the CI gate; worst exit
+code wins, and a closing summary names each missing or failed artifact.
+The plain re-measuring mode stays a separate local command.
 
 ``--rebalance`` validates the committed BENCH_rebalance.json (emitted by
 ``python -m benchmarks.sharded_scaling --rebalance``) against the DESIGN
@@ -325,9 +335,75 @@ def check_template() -> int:
     return 1 if fail else 0
 
 
+def check_pipeline() -> int:
+    """BENCH_pipeline.json: the DESIGN §4.5 acceptance bar — pipelined
+    sharded ``run_stream`` >= 1.25x serial elems/s at 8 simulated devices
+    on the paper-scale static row, every device count present with the
+    one-dispatch contract intact, and the deterministic digest grid:
+    pipelined == serial everywhere, kernel_accumulate on == off everywhere,
+    elastic 8-device == the 1-device all-buckets oracle — on the jnp AND
+    pallas backends. Validates the COMMITTED file only; the wall-clock
+    trajectory is informational (the speedup RATIO is the gate)."""
+    from benchmarks.pipeline_throughput import (BENCH_PATH as PIPELINE_PATH,
+                                                DEVICE_COUNTS, GATE_DEVICES,
+                                                GATE_SPEEDUP)
+
+    if not os.path.exists(PIPELINE_PATH):
+        print(f"bench_check: no committed artifact at {PIPELINE_PATH} — run "
+              f"`python -m benchmarks.pipeline_throughput --fast` first")
+        return 2
+    with open(PIPELINE_PATH) as f:
+        doc = json.load(f)
+    current = doc.get("current", {})
+    fail = False
+    print(f"{'row':22s} {'serial':>12s} {'pipelined':>12s} {'speedup':>8s}")
+    for d in DEVICE_COUNTS:
+        rec = current.get(f"devices_{d}", {})
+        for mode in ("static", "elastic"):
+            m = rec.get(mode, {})
+            if "speedup" not in m:
+                print(f"{d} {mode:18s} {'—':>12s} {'MISSING':>12s}"
+                      f"   REGRESSION")
+                fail = True
+                continue
+            problems = []
+            for tag in ("serial", "pipelined"):
+                if m[tag].get("stream_cache") != 1:
+                    problems.append(
+                        f"{tag} stream_cache={m[tag].get('stream_cache')}")
+                if m[tag].get("overflow"):
+                    problems.append(f"{tag} overflowed")
+            status = ("  REGRESSION(" + "; ".join(problems) + ")"
+                      if problems else "")
+            print(f"{d} {mode:18s} {m['serial']['eps']:12.0f} "
+                  f"{m['pipelined']['eps']:12.0f} {m['speedup']:7.2f}x"
+                  f"{status}")
+            fail = fail or bool(problems)
+    gate = current.get("gate", {})
+    speedup = gate.get("speedup") or 0.0
+    parity = current.get("parity", {})
+    problems = []
+    if speedup < GATE_SPEEDUP:
+        problems.append(f"speedup {speedup:.2f}x < {GATE_SPEEDUP}x "
+                        f"at {GATE_DEVICES} devices")
+    for claim in ("pipelined_eq_serial", "accum_invariant",
+                  "elastic_eq_oracle"):
+        if not parity.get(claim):
+            problems.append(f"digest claim broken: {claim}")
+    for cell in parity.get("broken", []):
+        print(f"  broken parity cell: {cell}")
+    verdict = "REGRESSION(" + "; ".join(problems) + ")" if problems else "ok"
+    print(f"pipeline gate: {speedup:.2f}x (>= {GATE_SPEEDUP}x required), "
+          f"parity={parity.get('ok')}   {verdict}")
+    return 1 if (fail or problems) else 0
+
+
 def check_all(tol: float | None) -> int:
     """Validate EVERY committed BENCH artifact in one call (the CI gate):
-    worst exit code wins, each section labelled. Validate-only — the plain
+    worst exit code wins, each section labelled, and a closing summary that
+    names every MISSING artifact (exit 2) and every failed section — one
+    glance says what to regenerate, instead of whichever KeyError/
+    FileNotFoundError surfaced first. Validate-only — the plain
     (re-measuring) throughput mode stays a separate local command; CI gates
     only on committed artifacts (wall-clock on shared runners is noise)."""
     checks = (
@@ -337,14 +413,45 @@ def check_all(tol: float | None) -> int:
         ("rebalance", check_rebalance),
         ("serving", lambda: check_serving(0.35 if tol is None else tol)),
         ("template", check_template),
+        ("pipeline", check_pipeline),
     )
-    worst = 0
+    worst, missing, failed = 0, [], []
     for name, fn in checks:
         print(f"=== bench_check --{name} ===")
-        rc = fn()
+        try:
+            rc = fn()
+        except Exception as e:     # a malformed artifact must not mask the
+            rc = 1                 # remaining sections' verdicts
+            print(f"bench_check --{name} crashed on its artifact: "
+                  f"{type(e).__name__}: {e}")
         print(f"--- {name}: {'OK' if rc == 0 else f'FAIL({rc})'} ---")
+        if rc == 2:
+            missing.append(name)
+        elif rc:
+            failed.append(name)
         worst = max(worst, rc)
+    print("=== bench_check --all summary ===")
+    if missing:
+        print(f"MISSING artifacts ({len(missing)}): "
+              + ", ".join(f"BENCH_{n}.json (regenerate: python -m "
+                          f"benchmarks.{_REGEN[n]})" for n in missing))
+    if failed:
+        print(f"FAILED sections ({len(failed)}): " + ", ".join(failed))
+    if not missing and not failed:
+        print(f"all {len(checks)} artifact checks passed")
     return worst
+
+
+# artifact -> regenerating module (the hint printed by the --all summary)
+_REGEN = {
+    "sharded": "sharded_scaling --fast",
+    "counter": "counter_throughput --fast",
+    "window": "window_throughput --fast",
+    "rebalance": "sharded_scaling --rebalance --fast",
+    "serving": "serving_qps --fast",
+    "template": "template_throughput",
+    "pipeline": "pipeline_throughput --fast",
+}
 
 
 def check_counter(tol: float) -> int:
@@ -398,6 +505,11 @@ def main(argv=None) -> int:
                     help="validate BENCH_template.json (templated steps "
                          ">= 95% of the frozen pre-template rows' elems/s, "
                          "DESIGN §3.8)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="validate BENCH_pipeline.json (pipelined sharded "
+                         "stream >= 1.25x serial at 8 devices + the "
+                         "pipelined/serial/accumulate/oracle digest grid, "
+                         "DESIGN §4.5)")
     ap.add_argument("--all", action="store_true",
                     help="validate every committed BENCH artifact in one "
                          "call (the CI gate); worst exit code wins")
@@ -406,6 +518,8 @@ def main(argv=None) -> int:
         return check_all(args.tol)
     if args.template:
         return check_template()
+    if args.pipeline:
+        return check_pipeline()
     if args.rebalance:
         return check_rebalance()
     if args.serving:

@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Cross-artifact throughput trajectory report.
+
+    python scripts/bench_trend.py
+
+Every ``BENCH_*.json`` artifact freezes a ``baseline`` at first capture and
+refreshes ``current`` on every emitter run (docs/benchmarks.md). This
+script walks ALL committed artifacts, collects every throughput leaf
+(``eps`` elements/second, ``qps`` requests/second) from both snapshots,
+and prints one aligned trajectory table: artifact/row, baseline, current,
+current/baseline ratio. The walk is schema-agnostic — nested records,
+per-device rows and per-backend rows all surface with their JSON path —
+so new artifacts join the report without code changes here.
+
+REPORT ONLY, exit 0 always: wall-clock on shared CI runners is too noisy
+to gate on (the gates live in ``scripts/bench_check.py``); this step
+exists so a PR's perf drift across the whole artifact suite is visible in
+the CI log at a glance. Wired into .github/workflows/ci.yml after the
+bench_check gates.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RATE_KEYS = ("eps", "qps")
+
+
+def _rate_leaves(node, path=""):
+    """-> [(json_path, value)] for every eps/qps leaf under ``node``."""
+    out = []
+    if isinstance(node, dict):
+        for k in sorted(node):
+            sub = f"{path}/{k}" if path else k
+            if k in RATE_KEYS and isinstance(node[k], (int, float)):
+                out.append((sub, float(node[k])))
+            else:
+                out.extend(_rate_leaves(node[k], sub))
+    return out
+
+
+def collect():
+    """-> [(artifact, row_path, baseline_rate, current_rate)] over every
+    committed BENCH_*.json, aligned on row path (None where a snapshot
+    lacks the row — e.g. a backfilled baseline)."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            rows.append((name, f"UNREADABLE: {type(e).__name__}", None, None))
+            continue
+        base = dict(_rate_leaves(doc.get("baseline") or {}))
+        cur = dict(_rate_leaves(doc.get("current") or {}))
+        for rp in sorted(set(base) | set(cur)):
+            rows.append((name, rp, base.get(rp), cur.get(rp)))
+    return rows
+
+
+def fmt_table(rows) -> str:
+    def num(v):
+        return f"{v:,.0f}" if v is not None else "-"
+
+    def ratio(b, c):
+        return f"{c / b:.2f}x" if b and c else "-"
+
+    table = [("artifact", "row", "baseline", "current", "ratio")]
+    for name, rp, b, c in rows:
+        table.append((name, rp, num(b), num(c), ratio(b, c)))
+    widths = [max(len(r[i]) for r in table) for i in range(5)]
+    lines = []
+    for i, r in enumerate(table):
+        lines.append("  ".join(
+            c.ljust(w) if j < 2 else c.rjust(w)
+            for j, (c, w) in enumerate(zip(r, widths))))
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def main() -> int:
+    rows = collect()
+    if not rows:
+        print("bench_trend: no BENCH_*.json artifacts found")
+        return 0
+    print(fmt_table(rows))
+    measured = [(b, c) for _n, _r, b, c in rows if b and c]
+    if measured:
+        geo = 1.0
+        for b, c in measured:
+            geo *= c / b
+        geo **= 1.0 / len(measured)
+        print(f"\nbench_trend: {len(rows)} rate rows across "
+              f"{len({n for n, *_ in rows})} artifacts; geometric-mean "
+              f"current/baseline = {geo:.3f}x (report only, never gates)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,7 +15,10 @@ verifies, with no third-party deps so it runs anywhere CI does:
      of its own headings (bare § elsewhere may cite the *paper* — e.g.
      "the paper's §6.3" — so only DESIGN.md is held to the bare form);
   3. every ``examples/*.py`` script is referenced from README.md — an
-     example nobody can discover is dead documentation.
+     example nobody can discover is dead documentation;
+  4. every committed ``BENCH_*.json`` artifact at the repo root has a
+     ``## BENCH_*`` schema section in ``docs/benchmarks.md`` — a gated
+     artifact whose schema is undocumented is unreviewable.
 
 Exit 0 when everything resolves; exit 1 with a file:line listing of every
 dangling citation / unreferenced example otherwise. Wired into CI between
@@ -116,13 +119,31 @@ def check_examples() -> list:
     return missing
 
 
+def check_bench_schemas() -> list:
+    """Committed BENCH_*.json artifacts without a docs/benchmarks.md
+    schema section."""
+    doc_path = os.path.join(ROOT, "docs", "benchmarks.md")
+    if not os.path.exists(doc_path):
+        return [("docs/benchmarks.md", 0,
+                 "MISSING — artifact schemas cannot be documented")]
+    with open(doc_path) as f:
+        doc = f.read()
+    missing = []
+    for name in sorted(os.listdir(ROOT)):
+        if name.startswith("BENCH_") and name.endswith(".json") \
+                and f"## {name}" not in doc:
+            missing.append((name, 0,
+                            "no schema section in docs/benchmarks.md"))
+    return missing
+
+
 def main() -> int:
     sections = design_sections(os.path.join(ROOT, "DESIGN.md"))
     if not sections:
         print("check_docs: FAIL — no §-headings found in DESIGN.md")
         return 1
     dangling, n_cites = check_citations(sections)
-    problems = dangling + check_examples()
+    problems = dangling + check_examples() + check_bench_schemas()
     if problems:
         print("check_docs: FAIL")
         for rel, lineno, what in problems:
@@ -133,7 +154,8 @@ def main() -> int:
         return 1
     print(f"check_docs: OK — {n_cites} DESIGN §-citations across the repo "
           f"all resolve ({len(sections)} sections); every examples/*.py is "
-          f"referenced from README.md")
+          f"referenced from README.md; every BENCH_*.json has a "
+          f"docs/benchmarks.md schema section")
     return 0
 
 

@@ -116,6 +116,15 @@ class DedupConfig:
     backend: str = "jnp"                 # "jnp" | "pallas" — batched-step impl
                                          # (pallas = fused single-launch kernel,
                                          # plane layouts only; DESIGN §3.4/§3.6)
+    kernel_accumulate: bool = False      # pallas counter kernels: scatter the
+                                         # per-event probe contributions into
+                                         # the VMEM-resident tiles inside the
+                                         # kernel instead of consuming (d, W)
+                                         # delta planes pre-reduced by XLA
+                                         # (bit-identical either way; §3.9).
+                                         # A no-op on the jnp backend and for
+                                         # the bitset family, whose kernel is
+                                         # already per-element (chunk_or).
     block_bits: int = 0                  # >0: blocked layout, 2^b-bit blocks
                                          # (VMEM-tile locality; DESIGN §3.3)
     delete_set_bits_only: bool = False   # phase-3 RSBF "find a set bit" (scan engine)

@@ -64,7 +64,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,7 @@ from .. import compat
 from ..core.batched import BatchResult, make_batched_step
 from ..core.config import DedupConfig
 from ..core.hashing import range_bucket, route_hash
+from ..core.sketch import get_spec
 from ..core.state import (FilterState, RouterState, WindowRing, init_router,
                           init_state)
 from ..distributed.sharding import rebalance_collect
@@ -82,11 +83,30 @@ from ..distributed.sharding import rebalance_collect
 _INT32_MAX = np.iinfo(np.int32).max
 
 
+class InFlight(NamedTuple):
+    """One dispatched-but-not-consumed batch — the second stage of the
+    pipelined scan carry (DESIGN §4.5). ``keys``/``cnt`` are the
+    POST-all_to_all receive buffers (per-source key windows and valid-lane
+    counts for the shard this device owns); ``o``/``sl``/``p``/``keep`` are
+    the home-side gather coordinates needed to route the verdicts back when
+    the batch is consumed one scan iteration later; ``ovf`` carries the
+    dispatch-side overflow count so it can be emitted next to the batch's
+    verdicts. ``sl`` is None on the static path (no bucket slots)."""
+    keys: jnp.ndarray                 # (1, S, C) / (1, S, b_r, C) uint32
+    cnt: jnp.ndarray                  # (1, S) / (1, S, b_r) int32
+    o: jnp.ndarray                    # (1, b) int32 destination shard
+    sl: Optional[jnp.ndarray]         # (1, b) int32 bucket slot (elastic)
+    p: jnp.ndarray                    # (1, b) int32 window position
+    keep: jnp.ndarray                 # (1, b) bool  routed (not overflowed)
+    ovf: jnp.ndarray                  # (1,)   int32 dispatch-side overflow
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedDedupConfig:
     base: DedupConfig
     mesh_axes: Tuple[str, ...] = ("data", "model")   # axes the filter shards span
     capacity_factor: float = 2.0
+    pipeline: bool = True          # double-buffered dispatch (DESIGN §4.5)
 
     @property
     def batch_axes(self) -> Tuple[str, ...]:
@@ -121,6 +141,19 @@ class ShardedDedupConfig:
         g = local_batch * self.n_shards(mesh)
         return max(8, math.ceil(g / self.n_buckets * self.capacity_factor))
 
+    def step_width(self, local_batch: int, mesh: Mesh) -> int:
+        """Owner-side compacted step width T' of the pipelined static path
+        (§4.5): received keys are valid-prefix windows by construction, so
+        the owner can pack them to ``local_batch`` expected elements plus an
+        8-sigma Poisson margin instead of running the step at the flat
+        ``n_shards * capacity`` dispatch width. Only used for variants whose
+        decision consumes no per-lane randomness (``spec.draw is None``) —
+        a width change re-indexes every rng draw for the others. Never wider
+        than the flat width (capacity_factor < 1 keeps the flat layout)."""
+        flat = self.n_shards(mesh) * self.capacity(local_batch, mesh)
+        t = local_batch + max(64, math.ceil(8.0 * math.sqrt(local_batch)))
+        return min(flat, max(8, -(-t // 8) * 8))
+
 
 class ShardedDedup:
     """Mesh-wide dedup service. State lives sharded over ``mesh_axes``."""
@@ -145,10 +178,14 @@ class ShardedDedup:
                 scfg.base, shards=self.n_shards).validate()
         self._step = make_batched_step(self.local_cfg)
         self.axis = scfg.mesh_axes
+        # owner-side step compaction (§4.5) is exact only when the decision
+        # rule consumes no per-lane randomness — the rng stream is indexed
+        # by lane, so ANY width change re-draws every lane
+        self._compactable = get_spec(scfg.base.variant).draw is None
         # jitted callables are built once per (kind, local_batch) and reused —
         # same compile-cache discipline as the single-device engine (§3.5)
         self._step_fns: Dict[int, jax.stages.Wrapped] = {}
-        self._stream_fns: Dict[int, jax.stages.Wrapped] = {}
+        self._stream_fns: Dict[Tuple[int, bool], jax.stages.Wrapped] = {}
 
     def _state_template(self) -> FilterState:
         """Structure-only FilterState matching what this service carries —
@@ -180,8 +217,17 @@ class ShardedDedup:
         kw = {}
         if self.local_cfg.variant == "swbf":
             if event_capacity is None:
-                event_capacity = (
-                    self.n_shards * self.scfg.capacity(local_batch, self.mesh))
+                # pipelined + compacted (§4.5): the step never runs wider
+                # than the compacted width, so each ring slot only has to
+                # absorb that many insertions — the ring (and every
+                # ring-width sort/scatter per batch) shrinks with it
+                if self.scfg.pipeline and self._compactable:
+                    event_capacity = self.scfg.step_width(
+                        local_batch, self.mesh)
+                else:
+                    event_capacity = (self.n_shards
+                                      * self.scfg.capacity(local_batch,
+                                                           self.mesh))
             kw["event_capacity"] = event_capacity
         base = init_state(self.local_cfg, seed, **kw)
 
@@ -345,7 +391,7 @@ class ShardedDedup:
         t_width = self.scfg.bucket_capacity(local_batch, self.mesh)
         cap = -(-t_width // n_shards)        # per (bucket, source) window
         all_axes = self.scfg.mesh_axes
-        threshold = float(self.scfg.base.rebalance_threshold)
+        monitor = self._monitor_fn()
         rows_e = jnp.arange(b_r, dtype=jnp.int32)[:, None]
         order = jnp.arange(nb, dtype=jnp.int32)
 
@@ -429,38 +475,7 @@ class ShardedDedup:
             dup = back[o.clip(0, n_shards - 1), sl, p] & keep
 
             # ---- load monitor + cond-gated re-partition (§4.4) ---------- //
-            my_ids = slots[me]                               # (b_r,)
-            if threshold > 0.0:
-                slot_load = new_bstate.load.sum(axis=-1)     # (b_r,)
-                contrib = jnp.zeros((nb,), jnp.int32).at[my_ids].set(slot_load)
-                bucket_load = jax.lax.psum(contrib, all_axes)
-                shard_load = jnp.zeros((n_shards,), jnp.int32
-                                       ).at[assign].add(bucket_load)
-                total = shard_load.sum()
-                ratio = (shard_load.max().astype(jnp.float32) * n_shards
-                         / jnp.maximum(total, 1).astype(jnp.float32))
-                repacked = self._lpt_assign(bucket_load, n_shards, b_r)
-                # fire only when the re-pack STRICTLY lowers the max shard
-                # load — a skew the packing cannot improve (e.g. one bucket
-                # per shard, where any re-pack is a pure permutation) must
-                # not permute state in place every batch
-                repacked_load = jnp.zeros((n_shards,), jnp.int32
-                                          ).at[repacked].add(bucket_load)
-                trigger = ((ratio > threshold) & (total > 0)
-                           & (repacked_load.max() < shard_load.max()))
-                new_assign = jnp.where(trigger, repacked, assign)
-                _, new_slots = self._slot_tables(new_assign, n_shards, b_r)
-                want = new_slots[me]                         # (b_r,)
-                new_bstate = jax.lax.cond(
-                    trigger,
-                    lambda t: rebalance_collect(t, my_ids, want, all_axes,
-                                                n_shards),
-                    lambda t: t,
-                    new_bstate)
-                router = RouterState(
-                    assign=new_assign,
-                    n_rebalances=router.n_rebalances
-                    + trigger.astype(jnp.int32))
+            new_bstate, router = monitor(new_bstate, router, me)
 
             out = jax.tree.map(lambda x: x[None], new_bstate)
             out = out._replace(router=router)
@@ -468,6 +483,275 @@ class ShardedDedup:
             return out, dup, overflow
 
         return local_fn
+
+    def _monitor_fn(self):
+        """The per-batch load monitor + cond-gated bucket re-partition
+        (§4.4), shared verbatim by the serial elastic body and the pipelined
+        consume stage: (bucket-slot state, router, device index) ->
+        (possibly permuted state, updated router). A no-op when
+        ``rebalance_threshold`` is 0 (monitoring off)."""
+        n_shards, b_r, nb = self.n_shards, self.b_r, self.scfg.n_buckets
+        all_axes = self.scfg.mesh_axes
+        threshold = float(self.scfg.base.rebalance_threshold)
+
+        def monitor(new_bstate, router: RouterState, me):
+            if threshold <= 0.0:
+                return new_bstate, router
+            assign = router.assign
+            _, slots = self._slot_tables(assign, n_shards, b_r)
+            my_ids = slots[me]                               # (b_r,)
+            slot_load = new_bstate.load.sum(axis=-1)         # (b_r,)
+            contrib = jnp.zeros((nb,), jnp.int32).at[my_ids].set(slot_load)
+            bucket_load = jax.lax.psum(contrib, all_axes)
+            shard_load = jnp.zeros((n_shards,), jnp.int32
+                                   ).at[assign].add(bucket_load)
+            total = shard_load.sum()
+            ratio = (shard_load.max().astype(jnp.float32) * n_shards
+                     / jnp.maximum(total, 1).astype(jnp.float32))
+            repacked = self._lpt_assign(bucket_load, n_shards, b_r)
+            # fire only when the re-pack STRICTLY lowers the max shard
+            # load — a skew the packing cannot improve (e.g. one bucket
+            # per shard, where any re-pack is a pure permutation) must
+            # not permute state in place every batch
+            repacked_load = jnp.zeros((n_shards,), jnp.int32
+                                      ).at[repacked].add(bucket_load)
+            trigger = ((ratio > threshold) & (total > 0)
+                       & (repacked_load.max() < shard_load.max()))
+            new_assign = jnp.where(trigger, repacked, assign)
+            _, new_slots = self._slot_tables(new_assign, n_shards, b_r)
+            want = new_slots[me]                             # (b_r,)
+            new_bstate = jax.lax.cond(
+                trigger,
+                lambda t: rebalance_collect(t, my_ids, want, all_axes,
+                                            n_shards),
+                lambda t: t,
+                new_bstate)
+            router = RouterState(
+                assign=new_assign,
+                n_rebalances=router.n_rebalances + trigger.astype(jnp.int32))
+            return new_bstate, router
+
+        return monitor
+
+    # --------------------------------------------- pipelined path (§4.5) //
+    def _static_pipe_fns(self, local_batch: int):
+        """Dispatch/consume split of the static body for the double-buffered
+        scan (§4.5). ``dispatch`` routes a batch and starts its all_to_all;
+        ``consume`` runs the (possibly compacted) batched step on a
+        previously dispatched batch and routes the verdicts home. The
+        receive-side valid mask is NOT shipped: every (source, dest) window
+        is a valid-prefix by construction (positions are cumsum ranks), so
+        per-source COUNTS reconstruct it exactly — one all_to_all fewer per
+        batch than the serial body, bit-identical verdicts."""
+        n_shards, step = self.n_shards, self._step
+        seed = self.local_cfg.seed
+        all_axes = self.scfg.mesh_axes
+        cap = self.scfg.capacity(local_batch, self.mesh)
+        flat = n_shards * cap
+        t_width = (self.scfg.step_width(local_batch, self.mesh)
+                   if self._compactable else flat)
+
+        def dispatch(state: FilterState, keys: jnp.ndarray,
+                     valid: jnp.ndarray) -> InFlight:
+            del state                        # static routing reads no state
+            owner = route_hash(keys, n_shards, seed)
+            onehot = (valid[:, None] &
+                      (owner[:, None] ==
+                       jnp.arange(n_shards, dtype=jnp.int32)[None, :]))
+            pos_in = jnp.cumsum(onehot, axis=0) - 1
+            my_pos = jnp.take_along_axis(
+                pos_in, owner[:, None], axis=1)[:, 0]
+            keep = valid & (my_pos < cap)
+            overflow = jnp.sum(valid & ~keep)
+            o = jnp.where(keep, owner, n_shards)
+            p = jnp.where(keep, my_pos, 0)
+            send_keys = jnp.zeros((n_shards, cap), jnp.uint32
+                                  ).at[o, p].set(keys, mode="drop")
+            send_cnt = jnp.sum(onehot & keep[:, None], axis=0,
+                               dtype=jnp.int32)                  # (S,)
+            recv_keys = jax.lax.all_to_all(
+                send_keys, all_axes, split_axis=0, concat_axis=0, tiled=True)
+            recv_cnt = jax.lax.all_to_all(
+                send_cnt, all_axes, split_axis=0, concat_axis=0, tiled=True)
+            return InFlight(recv_keys[None], recv_cnt[None], o[None], None,
+                            p[None], keep[None],
+                            overflow[None].astype(jnp.int32))
+
+        def consume(state: FilterState, fl: InFlight):
+            state = jax.tree.map(lambda x: x[0], state)
+            rk, cnt = fl.keys[0], fl.cnt[0]
+            lanes = jnp.arange(cap, dtype=jnp.int32)[None, :]
+            vmask = lanes < cnt[:, None]                     # (S, C)
+            if t_width < flat:
+                # owner-side compaction: rank = lanes before me, globally
+                offs = jnp.cumsum(cnt) - cnt                 # exclusive
+                rankm = offs[:, None] + lanes                # (S, C)
+                ok = vmask & (rankm < t_width)
+                rank_overflow = jnp.sum(vmask & ~ok)
+                tgt = jnp.where(ok, rankm, t_width)
+                ck = jnp.zeros((t_width,), jnp.uint32
+                               ).at[tgt.reshape(-1)].set(
+                                   rk.reshape(-1), mode="drop")
+                cvalid = (jnp.arange(t_width, dtype=jnp.int32)
+                          < jnp.minimum(cnt.sum(), t_width))
+                state, res = step(state, ck, cvalid)
+                dup_buf = res.dup[jnp.minimum(rankm, t_width - 1)] & ok
+            else:
+                rank_overflow = jnp.int32(0)
+                state, res = step(state, rk.reshape(-1), vmask.reshape(-1))
+                dup_buf = res.dup.reshape(n_shards, cap)
+            back = jax.lax.all_to_all(
+                dup_buf, all_axes, split_axis=0, concat_axis=0, tiled=True)
+            dup = back[fl.o[0].clip(0, n_shards - 1), fl.p[0]] & fl.keep[0]
+            state = jax.tree.map(lambda x: x[None], state)
+            ovf = fl.ovf + rank_overflow.astype(jnp.int32)
+            return state, dup, ovf
+
+        return dispatch, consume
+
+    def _elastic_pipe_fns(self, local_batch: int):
+        """Dispatch/consume split of the elastic body (§4.4 + §4.5). The
+        serial body's per-lane TAG buffer, its all_to_all, the valid-mask
+        all_to_all, and the per-slot tag SORT all disappear: tags are
+        source-major with in-source arrival order by construction, so a
+        valid lane's compaction rank is exactly (valid lanes from earlier
+        sources) + (its own prefix position) — an exclusive cumsum of the
+        shipped per-(source, slot) counts. Same step width T, same rng
+        threading: bit-identical to the serial elastic body for EVERY
+        variant, and therefore still device-count-invariant."""
+        n_shards, b_r, nb = self.n_shards, self.b_r, self.scfg.n_buckets
+        step = self._step
+        t_width = self.scfg.bucket_capacity(local_batch, self.mesh)
+        cap = -(-t_width // n_shards)        # per (bucket, source) window
+        all_axes = self.scfg.mesh_axes
+        monitor = self._monitor_fn()
+        order = jnp.arange(nb, dtype=jnp.int32)
+        rows3 = jnp.arange(b_r, dtype=jnp.int32)[None, :, None]
+
+        def a2a(x):
+            flat = x.reshape(n_shards, -1)
+            out = jax.lax.all_to_all(flat, all_axes, split_axis=0,
+                                     concat_axis=0, tiled=True)
+            return out.reshape(x.shape)
+
+        def dispatch(state: FilterState, keys: jnp.ndarray,
+                     valid: jnp.ndarray) -> InFlight:
+            assign = state.router.assign                 # (nb,) replicated
+            slot_of, _ = self._slot_tables(assign, n_shards, b_r)
+            bucket = range_bucket(keys, nb)
+            onehot = valid[:, None] & (bucket[:, None] == order[None, :])
+            pos_in = jnp.cumsum(onehot, axis=0) - 1
+            my_pos = jnp.take_along_axis(
+                pos_in, bucket[:, None], axis=1)[:, 0]
+            keep = valid & (my_pos < cap)
+            src_overflow = jnp.sum(valid & ~keep)
+            dest = assign[bucket]
+            o = jnp.where(keep, dest, n_shards)
+            sl = jnp.where(keep, slot_of[bucket], 0)
+            p = jnp.where(keep, my_pos, 0)
+            send_keys = jnp.zeros((n_shards, b_r, cap), jnp.uint32
+                                  ).at[o, sl, p].set(keys, mode="drop")
+            cnt_bucket = jnp.sum(onehot & keep[:, None], axis=0,
+                                 dtype=jnp.int32)            # (nb,)
+            send_cnt = jnp.zeros((n_shards, b_r), jnp.int32
+                                 ).at[assign, slot_of].set(cnt_bucket)
+            recv_keys = a2a(send_keys)
+            recv_cnt = a2a(send_cnt)
+            return InFlight(recv_keys[None], recv_cnt[None], o[None],
+                            sl[None], p[None], keep[None],
+                            src_overflow[None].astype(jnp.int32))
+
+        def consume(state: FilterState, fl: InFlight):
+            router = state.router
+            bstate = jax.tree.map(lambda x: x[0], state._replace(router=None))
+            me = self._axis_index()
+            rk, cnt = fl.keys[0], fl.cnt[0]          # (S, b_r, C) / (S, b_r)
+            lanes = jnp.arange(cap, dtype=jnp.int32)
+            vmask = lanes[None, None, :] < cnt[..., None]
+            offs = jnp.cumsum(cnt, axis=0) - cnt     # exclusive over sources
+            rankm = offs[..., None] + lanes[None, None, :]
+            ok = vmask & (rankm < t_width)
+            rank_overflow = jnp.sum(vmask & ~ok)
+            tgt = jnp.where(ok, rankm, t_width)
+            ck = jnp.zeros((b_r, t_width), jnp.uint32
+                           ).at[jnp.broadcast_to(rows3, tgt.shape), tgt
+                                ].set(rk, mode="drop")
+            n_val = jnp.minimum(cnt.sum(axis=0), t_width)    # (b_r,)
+            cvalid = (jnp.arange(t_width, dtype=jnp.int32)[None, :]
+                      < n_val[:, None])
+
+            def slot_body(_, xs):
+                st_i, kk, vv = xs
+                st_i, res = step(st_i, kk, vv)
+                return _, (st_i, res.dup)
+
+            _, (new_bstate, dup_c) = jax.lax.scan(
+                slot_body, 0, (bstate, ck, cvalid))          # dup_c (b_r, T)
+            dup_sel = (dup_c[jnp.broadcast_to(rows3, rankm.shape),
+                             jnp.minimum(rankm, t_width - 1)] & ok)
+            back = a2a(dup_sel)                              # (S, b_r, C)
+            dup = (back[fl.o[0].clip(0, n_shards - 1), fl.sl[0], fl.p[0]]
+                   & fl.keep[0])
+            new_bstate, router = monitor(new_bstate, router, me)
+            out = jax.tree.map(lambda x: x[None], new_bstate)
+            out = out._replace(router=router)
+            ovf = fl.ovf + rank_overflow.astype(jnp.int32)
+            return out, dup, ovf
+
+        return dispatch, consume
+
+    def _pipe_shard_mapped(self, local_batch: int):
+        """Shard-mapped prologue / body / epilogue of the pipelined stream
+        (§4.5). The scan carry is (FilterState, InFlight): iteration t first
+        CONSUMES batch t-1 (step + verdict return + elastic monitor), then
+        DISPATCHES batch t with the post-monitor router — the same
+        state-update order as the serial scan, so verdicts are bit-identical
+        pipelined-on vs pipelined-off."""
+        t = self._state_template()
+
+        def sub(subtree, spec):
+            return jax.tree.map(lambda _: spec, subtree)
+
+        state_spec = FilterState(
+            bits=P(self.axis), position=P(self.axis), load=P(self.axis),
+            rng=P(self.axis), ring=sub(t.ring, P(self.axis)),
+            router=sub(t.router, P()))
+        batch_spec = P(self.scfg.batch_axes)
+        if self.scfg.elastic:
+            dispatch, consume = self._elastic_pipe_fns(local_batch)
+        else:
+            dispatch, consume = self._static_pipe_fns(local_batch)
+        fl_spec = InFlight(
+            keys=P(self.axis), cnt=P(self.axis), o=P(self.axis),
+            sl=(P(self.axis) if self.scfg.elastic else None),
+            p=P(self.axis), keep=P(self.axis), ovf=P(self.axis))
+
+        def prologue_fn(state, keys, valid):
+            return dispatch(state, keys, valid)
+
+        def body_fn(state, fl, keys, valid):
+            state, dup, ovf = consume(state, fl)
+            fl = dispatch(state, keys, valid)
+            return state, fl, dup, ovf
+
+        def epilogue_fn(state, fl):
+            return consume(state, fl)
+
+        prologue = compat.shard_map(
+            prologue_fn, mesh=self.mesh,
+            in_specs=(state_spec, batch_spec, batch_spec),
+            out_specs=fl_spec, check_vma=False)
+        body = compat.shard_map(
+            body_fn, mesh=self.mesh,
+            in_specs=(state_spec, fl_spec, batch_spec, batch_spec),
+            out_specs=(state_spec, fl_spec, batch_spec, P(self.axis)),
+            check_vma=False)
+        epilogue = compat.shard_map(
+            epilogue_fn, mesh=self.mesh,
+            in_specs=(state_spec, fl_spec),
+            out_specs=(state_spec, batch_spec, P(self.axis)),
+            check_vma=False)
+        return prologue, body, epilogue
 
     def _shard_mapped(self, local_batch: int):
         """The shard-mapped (state, keys, valid) -> (state, dup, ovf) body;
@@ -494,12 +778,45 @@ class ShardedDedup:
             out_specs=(state_spec, batch_spec, P(self.axis)),
             check_vma=False)
 
+    def _pipe_fused_shard_mapped(self, local_batch: int):
+        """Single-batch dispatch+consume of the pipelined protocol (§4.5) —
+        the ``make_step`` entry point when ``pipeline=True``, so per-batch
+        stepping uses the same count-based dispatch, compacted step width,
+        and (for swbf) ring sizing as the double-buffered stream, and the
+        two entry points stay bit-identical on a shared ``init()``."""
+        t = self._state_template()
+
+        def sub(subtree, spec):
+            return jax.tree.map(lambda _: spec, subtree)
+
+        state_spec = FilterState(
+            bits=P(self.axis), position=P(self.axis), load=P(self.axis),
+            rng=P(self.axis), ring=sub(t.ring, P(self.axis)),
+            router=sub(t.router, P()))
+        batch_spec = P(self.scfg.batch_axes)
+        if self.scfg.elastic:
+            dispatch, consume = self._elastic_pipe_fns(local_batch)
+        else:
+            dispatch, consume = self._static_pipe_fns(local_batch)
+
+        def fused(state, keys, valid):
+            fl = dispatch(state, keys, valid)
+            return consume(state, fl)
+
+        return compat.shard_map(
+            fused, mesh=self.mesh,
+            in_specs=(state_spec, batch_spec, batch_spec),
+            out_specs=(state_spec, batch_spec, P(self.axis)),
+            check_vma=False)
+
     # -------------------------------------------------------------- //
     def make_step(self, local_batch: int):
         """Returns a jitted (state, keys) -> (state, dup, overflow) fn for
         one global batch of ``local_batch * n_shards`` keys (all valid)."""
         if local_batch not in self._step_fns:
-            smapped = self._shard_mapped(local_batch)
+            smapped = (self._pipe_fused_shard_mapped(local_batch)
+                       if self.scfg.pipeline
+                       else self._shard_mapped(local_batch))
 
             def step(state: FilterState, keys: jnp.ndarray):
                 valid = jnp.ones(keys.shape, bool)
@@ -512,21 +829,54 @@ class ShardedDedup:
     def _make_stream(self, local_batch: int):
         """One jitted scan over batches of the shard-mapped body, the sharded
         state donated (aliased in place across the whole stream) — the
-        sharded mirror of the single-device ``run_stream`` (§3.5)."""
-        if local_batch not in self._stream_fns:
-            smapped = self._shard_mapped(local_batch)
+        sharded mirror of the single-device ``run_stream`` (§3.5).
 
-            def stream(state: FilterState, kb: jnp.ndarray, vb: jnp.ndarray):
-                def body(st, xs):
-                    kk, vv = xs
-                    st, dup, ovf = smapped(st, kk, vv)
-                    return st, (dup, ovf)
+        With ``pipeline=True`` (default) the scan is double-buffered
+        (§4.5): a prologue dispatches batch 0 (route + all_to_all, no state
+        touched), each scan iteration consumes the in-flight batch and
+        dispatches the next one, and an epilogue consumes the final batch —
+        so batch t+1's routing and key exchange are issued while batch t's
+        step is still outstanding, giving the XLA scheduler an async
+        collective to overlap with compute. Verdicts are bit-identical to
+        the serial scan; the verdict row for batch t is simply produced one
+        iteration later."""
+        key = (local_batch, bool(self.scfg.pipeline))
+        if key not in self._stream_fns:
+            if self.scfg.pipeline:
+                prologue, body_sm, epilogue = (
+                    self._pipe_shard_mapped(local_batch))
 
-                state, (dups, ovfs) = jax.lax.scan(body, state, (kb, vb))
-                return state, dups, ovfs
+                def stream(state: FilterState, kb: jnp.ndarray,
+                           vb: jnp.ndarray):
+                    fl0 = prologue(state, kb[0], vb[0])
 
-            self._stream_fns[local_batch] = jax.jit(stream, donate_argnums=0)
-        return self._stream_fns[local_batch]
+                    def body(carry, xs):
+                        st, fl = carry
+                        kk, vv = xs
+                        st, fl, dup, ovf = body_sm(st, fl, kk, vv)
+                        return (st, fl), (dup, ovf)
+
+                    (state, fl_last), (dups, ovfs) = jax.lax.scan(
+                        body, (state, fl0), (kb[1:], vb[1:]))
+                    state, dup_last, ovf_last = epilogue(state, fl_last)
+                    dups = jnp.concatenate([dups, dup_last[None]], axis=0)
+                    ovfs = jnp.concatenate([ovfs, ovf_last[None]], axis=0)
+                    return state, dups, ovfs
+            else:
+                smapped = self._shard_mapped(local_batch)
+
+                def stream(state: FilterState, kb: jnp.ndarray,
+                           vb: jnp.ndarray):
+                    def body(st, xs):
+                        kk, vv = xs
+                        st, dup, ovf = smapped(st, kk, vv)
+                        return st, (dup, ovf)
+
+                    state, (dups, ovfs) = jax.lax.scan(body, state, (kb, vb))
+                    return state, dups, ovfs
+
+            self._stream_fns[key] = jax.jit(stream, donate_argnums=0)
+        return self._stream_fns[key]
 
     def run_stream(self, state: FilterState, keys: jnp.ndarray
                    ) -> Tuple[FilterState, jnp.ndarray, jnp.ndarray]:

@@ -7,6 +7,8 @@ generator directly."""
 
 from __future__ import annotations
 
+import warnings
+
 from .common import (DEFAULT_CHUNK_B, DEFAULT_TILE_W,            # noqa: F401
                      VMEM_FILTER_BYTES_LIMIT, check_vmem_budget,
                      largest_tile as _largest_tile,
@@ -20,6 +22,10 @@ def make_fused_batched_step(cfg, *, tile_w: int = DEFAULT_TILE_W,
                             interpret: bool | None = None):
     """Deprecated alias: the bitset-family fused step from the sketch
     template — same signature and bit-identical results as before."""
+    warnings.warn(
+        "repro.kernels.fused_step.make_fused_batched_step is deprecated; "
+        "use repro.kernels.fused_template.make_fused_step instead",
+        DeprecationWarning, stacklevel=2)
     cfg = cfg.validate()
     from ..core.sketch import get_spec
     spec = get_spec(cfg.variant)

@@ -17,6 +17,19 @@ VMEM-resident and written in place (``input_output_aliases``):
   (sorting does not belong in a kernel), with the exact nonzero-cell load
   delta from the tile's pre/post nonzero words.
 
+``cfg.kernel_accumulate`` (DESIGN.md §3.9, off by default) switches the
+counter family's delta operands from pre-reduced (d, W) planes to the
+per-event form: the kernel receives the SORTED event cells (word index +
+head-gated contribution masks, one row per count bit-plane) and
+OR-accumulates them into the VMEM-resident tile directly (``chunk_or``
+tree-OR — heads are unique per cell, so the OR is collision-free), instead
+of XLA scattering the events into filter-sized delta planes first and the
+kernel streaming those planes back in. The event *sort* stays outside
+either way; only the filter-sized reduction moves in. Bit-identical to the
+delta path by construction: the masks are exactly the words the outside
+scatter would have built. The bitset family already works per-event
+(``chunk_or`` below), so the flag is a documented no-op there.
+
 Bit-identity with the jnp steps is by construction, not by porting: the
 kernel traces the SAME decision fn and the SAME plane algebra
 (``planes_saturating_sub/add``, ``planes_set_value``) as
@@ -42,8 +55,8 @@ from jax.experimental import pallas as pl
 from ..core.batched import (BatchRandomness, BatchResult, intra_batch_seen,
                             ring_push, sbf_planes_3d)
 from ..core.hashing import derive_seeds, hash_positions
-from ..core.packed import (planes_saturating_add, planes_saturating_sub,
-                           planes_set_value, split_pos)
+from ..core.packed import (clamped_run_counts, planes_saturating_add,
+                           planes_saturating_sub, planes_set_value, split_pos)
 from ..core.state import FilterState
 from .common import (DEFAULT_CHUNK_B, DEFAULT_TILE_W, check_vmem_budget,
                      chunk_or, largest_tile, popcount_sum)
@@ -67,14 +80,39 @@ def make_fused_step(cfg, spec=None, *, tile_w: int = DEFAULT_TILE_W,
                 f"the fused {cfg.variant} kernel needs the bit-plane layout "
                 f"(cfg.layout='planes'); got {cfg.effective_layout!r}")
         return _make_counter_kernel_step(cfg, spec, tile_w=tile_w,
-                                         interpret=interpret)
+                                         chunk_b=chunk_b, interpret=interpret)
     return _make_bitset_kernel_step(cfg, spec, tile_w=tile_w,
                                     chunk_b=chunk_b, interpret=interpret)
 
 
 # ---------------- counter family (d-bit plane cells) --------------------- //
 
-def _make_counter_kernel_step(cfg, spec, *, tile_w: int,
+def _event_operands(events, heads, cmax, rows, w, chunk):
+    """Sorted event cells -> the accumulate mode's kernel operands (§3.9):
+    per-event word index plus head-gated contribution mask rows — the exact
+    words the outside ``count_planes_from_sorted`` / set-OR scatter would
+    have built, one row per count bit-plane (``rows`` == 1 with cmax == 0
+    selects the single-bit set-to-Max form). Sentinel events (32·W) land on
+    word index W, which matches no tile lane — the in-kernel OR drops them
+    exactly like the scatter's mode='drop'. Padded to a multiple of
+    ``chunk`` (the tree-OR needs power-of-two chunks)."""
+    w_idx = (events >> 5).astype(jnp.int32)
+    bit = (events & 31).astype(jnp.uint32)
+    if cmax == 0:
+        masks = jnp.where(heads, jnp.uint32(1) << bit, jnp.uint32(0))[None]
+    else:
+        _, cnt = clamped_run_counts(events, cmax)
+        cnt = jnp.where(heads, cnt, jnp.uint32(0))
+        masks = jnp.stack([((cnt >> p) & jnp.uint32(1)) << bit
+                           for p in range(rows)])
+    pad = (-events.shape[0]) % chunk
+    if pad:
+        w_idx = jnp.pad(w_idx, (0, pad), constant_values=w)
+        masks = jnp.pad(masks, ((0, 0), (0, pad)))
+    return w_idx, masks
+
+
+def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
                               interpret: bool | None):
     s, w = cfg.s, cfg.s_words
     d, k = cfg.n_planes, cfg.k
@@ -89,18 +127,23 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int,
     events_fn = spec.make_events(cfg)
     has_sub, set_mode = spec.has_sub, spec.combine == "set"
     uses_seen, value_probe = spec.uses_seen, spec.probe == "value"
+    accumulate = cfg.kernel_accumulate
     # VMEM working set: the planes, the subtract planes if the sketch decays,
     # and the insert operand — one OR word row for set-to-Max, d count planes
-    # for saturating add (sbf: (2d+1)·W·4, swbf: 3d·W·4, cms/hh: 2d·W·4)
-    vmem_words = d + (d if has_sub else 0) + (1 if set_mode else d)
+    # for saturating add (sbf: (2d+1)·W·4, swbf: 3d·W·4, cms/hh: 2d·W·4).
+    # Accumulate mode (§3.9) swaps the delta planes for per-event operands,
+    # sized by the event counts at call time.
+    vmem_words = d + (0 if accumulate else
+                      (d if has_sub else 0) + (1 if set_mode else d))
+    # saturating subtract/add clamp counts to the plane capacity; set-to-Max
+    # events are single OR bits (cmax == 0 selects that form)
+    sub_cmax = cmax if set_mode else (1 << d) - 1
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
     def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
         b = keys.shape[0]
         planes = sbf_planes_3d(state.bits)                       # (d, 1, W)
-        check_vmem_budget(vmem_words * w * 4,
-                          f"{cfg.variant} planes + event deltas")
         tw = largest_tile(w, tile_w)
         n_tiles = w // tw
 
@@ -114,9 +157,29 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int,
         ev = events_fn(state, pos, valid, rnd)
 
         operands = [planes]
-        if has_sub:
-            operands.append(ev.sub_planes)
-        operands.append(ev.set_delta if set_mode else ev.add_planes)
+        if accumulate:
+            # per-event operands; the (d, W) plane scatters the events_fn
+            # also built are never consumed and fold away under DCE (§3.9)
+            tbc = 1 << max(3, min(chunk_b, ev.ins_events.shape[0]) - 1
+                           ).bit_length()
+            if has_sub:
+                sub_w_op, sub_m_op = _event_operands(
+                    ev.sub_events, ev.sub_heads, sub_cmax, d, w, tbc)
+                operands += [sub_w_op, sub_m_op]
+            ins_w_op, ins_m_op = _event_operands(
+                ev.ins_events, ev.ins_heads, 0 if set_mode else (1 << d) - 1,
+                d, w, tbc)
+            operands += [ins_w_op, ins_m_op]
+            ev_words = (sum(x.size for x in (sub_w_op, sub_m_op))
+                        if has_sub else 0) + ins_w_op.size + ins_m_op.size
+        else:
+            if has_sub:
+                operands.append(ev.sub_planes)
+            operands.append(ev.set_delta if set_mode else ev.add_planes)
+            ev_words = 0
+        check_vmem_budget(vmem_words * w * 4 + ev_words * 4,
+                          f"{cfg.variant} planes + event "
+                          f"{'operands' if accumulate else 'deltas'}")
         operands += [iw, im, valid.astype(jnp.int32)]
         if uses_seen:
             operands.append(seen.astype(jnp.int32))
@@ -125,8 +188,15 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int,
         def kernel(*refs):
             it = iter(refs)
             planes_ref = next(it)
-            sub_ref = next(it) if has_sub else None
-            ins_ref = next(it)
+            if accumulate:
+                sub_w_ref, sub_m_ref = ((next(it), next(it))
+                                        if has_sub else (None, None))
+                ins_w_ref, ins_m_ref = next(it), next(it)
+                sub_ref = ins_ref = None
+            else:
+                sub_ref = next(it) if has_sub else None
+                ins_ref = next(it)
+                sub_w_ref = sub_m_ref = ins_w_ref = ins_m_ref = None
             iw_ref, im_ref, valid_ref = next(it), next(it), next(it)
             seen_ref = next(it) if uses_seen else None
             load_ref = next(it)
@@ -157,24 +227,55 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int,
             seen_ = (seen_ref[...] != 0) if uses_seen else None
             dup_ref[...] = decide(vals, valid_, seen_).astype(jnp.int32)
 
+            if accumulate:
+                sub_w_ = sub_w_ref[...] if has_sub else None
+                sub_m_ = sub_m_ref[...] if has_sub else None
+                ins_w_, ins_m_ = ins_w_ref[...], ins_m_ref[...]
+
+            def accum_tile(w_idx, m_rows, n_rows, lane):
+                # per-event OR-accumulation into the tile (§3.9): the same
+                # chunked tree-OR the bitset kernel uses — heads are unique
+                # per cell, so bits never collide within a plane row
+                out = []
+                for p in range(n_rows):
+                    acc = jnp.zeros(lane.shape, jnp.uint32)
+                    for c in range(w_idx.shape[0] // tbc):
+                        sl = slice(c * tbc, (c + 1) * tbc)
+                        acc = acc | chunk_or(w_idx[sl], m_rows[p][sl], lane)
+                    out.append(acc)
+                return out
+
             # --- fused subtract + set/add + load sweep -------------------- //
             def tile_body(t, dload):
                 base = t * tw
+                lane = base + jax.lax.iota(jnp.int32, tw)
                 a = jnp.stack([jax.lax.dynamic_slice(rows[p], (base,), (tw,))
                                for p in range(d)])
                 r = a
                 if has_sub:
-                    e = jnp.stack(
-                        [jax.lax.dynamic_slice(sub_ref[p, :], (base,), (tw,))
-                         for p in range(d)])
+                    if accumulate:
+                        e = jnp.stack(accum_tile(sub_w_, sub_m_, d, lane))
+                    else:
+                        e = jnp.stack([
+                            jax.lax.dynamic_slice(sub_ref[p, :], (base,),
+                                                  (tw,))
+                            for p in range(d)])
                     r = planes_saturating_sub(r, e)
                 if set_mode:
-                    i = jax.lax.dynamic_slice(ins_ref[...], (base,), (tw,))
+                    if accumulate:
+                        (i,) = accum_tile(ins_w_, ins_m_, 1, lane)
+                    else:
+                        i = jax.lax.dynamic_slice(ins_ref[...], (base,),
+                                                  (tw,))
                     r = planes_set_value(r, i, cmax)
                 else:
-                    c = jnp.stack(
-                        [jax.lax.dynamic_slice(ins_ref[p, :], (base,), (tw,))
-                         for p in range(d)])
+                    if accumulate:
+                        c = jnp.stack(accum_tile(ins_w_, ins_m_, d, lane))
+                    else:
+                        c = jnp.stack([
+                            jax.lax.dynamic_slice(ins_ref[p, :], (base,),
+                                                  (tw,))
+                            for p in range(d)])
                     r = planes_saturating_add(r, c)
                 pre_nz, post_nz = a[0], r[0]
                 for p in range(d):

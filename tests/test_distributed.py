@@ -267,6 +267,96 @@ def test_sharded_overflow_accumulates_into_metrics_devicewise():
     assert m._pending_ovf == []
 
 
+def test_pipelined_stream_matches_serial_bitwise():
+    """§4.5: the pipelined scan changes schedule, not math. Three paths at
+    4 devices on a zipf-skewed stream: static compacted counter (swbf —
+    compacted step width + shrunken ring), static flat random (rlbsbf —
+    lane-indexed draws forbid compaction), and the elastic bucket router
+    (swbf). Pipelined == serial dup verdicts and overflow, bit for bit."""
+    out = _run_subprocess("""
+        import hashlib, json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import set_mesh
+        from repro.core import DedupConfig
+        from repro.data.streams import zipf_range_stream
+        from repro.dedup import ShardedDedup, ShardedDedupConfig
+        mesh = jax.make_mesh((4, 1), ("data", "model"))
+        keys, _ = zipf_range_stream(4096, universe=1 << 11, a=1.2, seed=7)
+        jk = jnp.asarray(keys)
+        def run(cfg, pipe, **kw):
+            sd = ShardedDedup(
+                ShardedDedupConfig(base=cfg, pipeline=pipe, **kw), mesh)
+            with set_mesh(mesh):
+                _st, dup, ovf = sd.run_stream(sd.init(), jk)
+            return [hashlib.sha256(np.asarray(dup).tobytes()).hexdigest(),
+                    int(np.asarray(ovf).sum())]
+        elastic = dict(rebalance_buckets=8, rebalance_threshold=1.3)
+        res = {}
+        for name, cfg, kw in (
+            ("swbf_static",
+             DedupConfig.for_variant("swbf", window=3, memory_bits=1 << 15,
+                                     batch_size=512, packed=True), {}),
+            ("rlbsbf_static",
+             DedupConfig.for_variant("rlbsbf", memory_bits=1 << 15,
+                                     batch_size=512, packed=True), {}),
+            ("swbf_elastic",
+             DedupConfig.for_variant("swbf", window=3, memory_bits=1 << 15,
+                                     batch_size=512, packed=True, **elastic),
+             {"capacity_factor": 8.0}),
+        ):
+            res[name] = [run(cfg, True, **kw), run(cfg, False, **kw)]
+        print(json.dumps(res))
+    """, devices=4)
+    res = json.loads(out.strip().splitlines()[-1])
+    for name, (pipelined, serial) in res.items():
+        assert pipelined == serial, (name, pipelined, serial)
+
+
+def test_pipelined_stream_donates_filter_planes():
+    """§4.5: the double-buffered scan must not copy the filter planes.
+    The sharded state is donated and buffer-aliased through the pipelined
+    stream exactly like the serial one — the InFlight half of the carry
+    adds only exchange-buffer-sized arrays, never a plane-stack copy.
+    Extends the single-device donation family
+    (test_swbf_stream_donates_planes_and_ring)."""
+    out = _run_subprocess("""
+        import re, json
+        import jax, jax.numpy as jnp
+        from repro.compat import set_mesh
+        from repro.core import DedupConfig
+        from repro.dedup import ShardedDedup, ShardedDedupConfig
+        S = 4
+        mesh = jax.make_mesh((S, 1), ("data", "model"))
+        cfg = DedupConfig.for_variant("swbf", window=3, memory_bits=1 << 16,
+                                      batch_size=512, packed=True)
+        sd = ShardedDedup(ShardedDedupConfig(base=cfg), mesh)
+        assert sd.scfg.pipeline          # the default path under test
+        with set_mesh(mesh):
+            state = sd.init()
+            kb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.uint32)
+            vb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.bool_)
+            lowered = sd._make_stream(cfg.batch_size // S).lower(
+                state, kb, vb)
+            txt = lowered.compile().as_text()
+        # per-device SPMD module: the leading shard axis collapses to 1
+        def perdev(arr, dt):
+            return dt + "[" + ",".join(
+                ["1"] + [str(d) for d in arr.shape[1:]]) + "]"
+        shapes = {"planes": perdev(state.bits, "u32"),
+                  "ring": perdev(state.ring.events, "s32")}
+        sig = txt.split("entry_computation_layout={(", 1)[1].split(")->", 1)[0]
+        params = re.findall(r"[a-z]+\\d*\\[[\\d,]*\\]", sig)
+        alias = txt.split("input_output_alias={", 1)[1]
+        alias = alias.split("entry_computation_layout", 1)[0]
+        aliased = {int(p) for p in re.findall(r"\\{\\d+\\}: \\((\\d+),", alias)}
+        print(json.dumps({k: params.index(s) in aliased
+                          for k, s in shapes.items()}))
+    """, devices=4)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["planes"], "filter plane stack copied by the pipelined carry"
+    assert res["ring"], "ring events copied by the pipelined carry"
+
+
 def test_hlo_collective_parser():
     hlo = """
   %all-reduce.26 = (f32[32,16]{1,0}, f32[32,16]{1,0}, /*index=2*/f32[8]{0}) all-reduce(%a, %b, %c), replica_groups=...

@@ -41,6 +41,26 @@ def test_fused_step_vmem_budget_guard():
         step(st, jnp.zeros((16,), jnp.uint32), jnp.ones((16,), bool))
 
 
+def test_shim_factories_emit_deprecation_warning():
+    """The fused_step / fused_counter_step shims must not silently alias:
+    each factory warns once per call, pointing at fused_template."""
+    from repro.kernels.fused_counter_step import (make_fused_counter_step,
+                                                  make_fused_swbf_step)
+    cfg_bit = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 13,
+                                      packed=True, backend="pallas")
+    with pytest.warns(DeprecationWarning, match="fused_template"):
+        make_fused_batched_step(cfg_bit)
+    cfg_sbf = DedupConfig.for_variant("sbf", memory_bits=1 << 13,
+                                      packed=True, backend="pallas")
+    with pytest.warns(DeprecationWarning, match="fused_template"):
+        make_fused_counter_step(cfg_sbf)
+    cfg_swbf = DedupConfig.for_variant("swbf", memory_bits=1 << 13,
+                                       window=4, packed=True,
+                                       backend="pallas")
+    with pytest.warns(DeprecationWarning, match="fused_template"):
+        make_fused_swbf_step(cfg_swbf)
+
+
 def test_backend_validation():
     with pytest.raises(ValueError, match="pallas"):
         DedupConfig.for_variant("rlbsbf", memory_bits=1 << 13,
