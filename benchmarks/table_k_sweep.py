@@ -1,6 +1,6 @@
 """Paper Tables 1-3: FPR/FNR of BSBF / BSBFSD / RLBSBF vs k (1..5) at three
 memory sizes, 1B-record 60%-distinct stream — reproduced at 1/256 scale
-(ratios held: records-per-bit identical; DESIGN.md §7).
+(ratios held: records-per-bit identical; DESIGN.md §8).
 
 Validates the paper's parameter study: FPR falls and FNR rises with k for
 BSBF/RLBSBF (Table 1/3), BSBFSD's FPR *rises* with k at small memory

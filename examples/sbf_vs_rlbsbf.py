@@ -26,7 +26,7 @@ from repro.data.streams import zipf_stream
 from repro.dedup import truth_from_stream
 
 N = 200_000
-MEMORY_BITS = 1 << 18                    # 32 KB — container-scaled (§7)
+MEMORY_BITS = 1 << 18                    # 32 KB — container-scaled (§8)
 UNIVERSE = 60_000
 
 keys_np, _ = zipf_stream(N, universe=UNIVERSE, a=1.3, seed=42)

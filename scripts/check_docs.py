@@ -18,7 +18,11 @@ verifies, with no third-party deps so it runs anywhere CI does:
      example nobody can discover is dead documentation;
   4. every committed ``BENCH_*.json`` artifact at the repo root has a
      ``## BENCH_*`` schema section in ``docs/benchmarks.md`` — a gated
-     artifact whose schema is undocumented is unreviewable.
+     artifact whose schema is undocumented is unreviewable;
+  5. every lint rule registered in ``src/repro/analysis/`` (the
+     ``Rule("name", ...)`` / ``SourceRule("name", ...)`` literals) is
+     documented by name in DESIGN.md §6 — an enforced invariant nobody
+     can look up is policy by surprise.
 
 Exit 0 when everything resolves; exit 1 with a file:line listing of every
 dangling citation / unreferenced example otherwise. Wired into CI between
@@ -137,13 +141,62 @@ def check_bench_schemas() -> list:
     return missing
 
 
+# lint-rule registrations: the name is always the first (literal) argument
+_RULE_DEF = re.compile(r"\b(?:Source)?Rule\(\s*\n?\s*\"([a-z0-9-]+)\"")
+
+
+def _design_section_body(design_text: str, number: str) -> str:
+    """Body of ``## §<number> ...`` up to the next ``## `` heading."""
+    m = re.search(rf"^## §{re.escape(number)}\b.*$", design_text,
+                  flags=re.M)
+    if not m:
+        return ""
+    rest = design_text[m.end():]
+    nxt = re.search(r"^## ", rest, flags=re.M)
+    return rest[:nxt.start()] if nxt else rest
+
+
+def check_lint_rules() -> list:
+    """Registered lint rules (``Rule("name", ...)`` literals in
+    src/repro/analysis/) missing from DESIGN.md §6."""
+    adir = os.path.join(ROOT, "src", "repro", "analysis")
+    if not os.path.isdir(adir):
+        return [("src/repro/analysis", 0, "MISSING — rule registry gone")]
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        body = _design_section_body(f.read(), "6")
+    if not body:
+        return [("DESIGN.md", 0, "no §6 section to document lint rules in")]
+    problems = []
+    n_rules = 0
+    for name in sorted(os.listdir(adir)):
+        if not name.endswith(".py"):
+            continue
+        path = os.path.join(adir, name)
+        with open(path, errors="replace") as f:
+            text = f.read()
+        for m in _RULE_DEF.finditer(text):
+            n_rules += 1
+            rule = m.group(1)
+            if f"`{rule}`" not in body:
+                lineno = text.count("\n", 0, m.start()) + 1
+                problems.append(
+                    (f"src/repro/analysis/{name}", lineno,
+                     f"lint rule `{rule}` not documented in DESIGN.md §6"))
+    if not n_rules:
+        problems.append(("src/repro/analysis", 0,
+                         "no Rule(...) registrations found — the "
+                         "extraction regex or the registry moved"))
+    return problems
+
+
 def main() -> int:
     sections = design_sections(os.path.join(ROOT, "DESIGN.md"))
     if not sections:
         print("check_docs: FAIL — no §-headings found in DESIGN.md")
         return 1
     dangling, n_cites = check_citations(sections)
-    problems = dangling + check_examples() + check_bench_schemas()
+    problems = (dangling + check_examples() + check_bench_schemas()
+                + check_lint_rules())
     if problems:
         print("check_docs: FAIL")
         for rel, lineno, what in problems:
@@ -155,7 +208,8 @@ def main() -> int:
     print(f"check_docs: OK — {n_cites} DESIGN §-citations across the repo "
           f"all resolve ({len(sections)} sections); every examples/*.py is "
           f"referenced from README.md; every BENCH_*.json has a "
-          f"docs/benchmarks.md schema section")
+          f"docs/benchmarks.md schema section; every registered lint rule "
+          f"is documented in DESIGN §6")
     return 0
 
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Thin wrapper over ``python -m repro.analysis`` (hot-path lint sweep).
+
+Works from a checkout without PYTHONPATH: prepends ``src/`` when the
+package is not already importable. See DESIGN.md §6 for the rules.
+"""
+
+import os
+import sys
+
+if __name__ == "__main__":
+    try:
+        import repro.analysis  # noqa: F401
+    except ImportError:
+        sys.path.insert(0, os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "src"))
+    from repro.analysis.__main__ import main
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Static analysis of the hot path (DESIGN.md §6).
+
+Two engines over one finding/rule vocabulary:
+
+  * ``hlo_lint`` — rules over COMPILED artifacts (optimized HLO text,
+    entry layouts, alias tables, while-loop carries) of every jitted
+    entry point in ``entrypoints.iter_entry_points()``.
+  * ``source_lint`` — rules over the SOURCE AST (compat choke point,
+    host syncs in hot modules, deprecated shims, tracer branches).
+
+Run the full sweep with ``python -m repro.analysis`` (or the
+``scripts/lint_hotpath.py`` wrapper); intentional violations live in
+``scripts/lint_baseline.json`` with one-line justifications.
+"""
+
+from .hlo_lint import (  # noqa: F401
+    Finding, HLO_RULES, Rule, Target, aliased_param_indices,
+    entry_computation_text, entry_io_bytes, entry_param_types,
+    hlo_tuple_bytes, lint_entry, reduce_operand_dims, resolve_rules,
+    while_carry_bytes,
+)
+from .entrypoints import (  # noqa: F401
+    CANON_BATCH, CANON_MEMORY_BITS, EntryPoint, get_entry,
+    iter_entry_points,
+)
+from .source_lint import (  # noqa: F401
+    SOURCE_RULES, SourceRule, is_hot, lint_sources,
+)
+from .runner import (  # noqa: F401
+    LintReport, load_baseline, render, run_lint,
+)

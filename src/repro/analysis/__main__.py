@@ -1,0 +1,90 @@
+"""CLI for the hot-path lint sweep: ``python -m repro.analysis``.
+
+Exit code 0 iff no finding outside the baseline. See DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import entrypoints, hlo_lint, source_lint
+from .runner import load_baseline, render, run_lint
+
+DEFAULT_BASELINE = os.path.join(
+    source_lint.REPO_ROOT, "scripts", "lint_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Lint every jitted hot path (compiled HLO + source "
+                    "AST) against the invariants in DESIGN.md §6.")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="suppression file (default scripts/"
+                         "lint_baseline.json; 'none' disables)")
+    ap.add_argument("--json", metavar="PATH", dest="json_path",
+                    help="also write the report as JSON ('-' for stdout)")
+    ap.add_argument("--entry", action="append", default=None,
+                    help="only entry points whose name contains this "
+                         "substring (repeatable)")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="only this rule name (repeatable)")
+    ap.add_argument("--source-only", action="store_true",
+                    help="skip the HLO sweep")
+    ap.add_argument("--hlo-only", action="store_true",
+                    help="skip the source sweep")
+    ap.add_argument("--list", action="store_true",
+                    help="list entry points and rules, then exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="no per-entry progress lines")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        print("entry points:")
+        for ep in entrypoints.iter_entry_points():
+            print(f"  {ep.name}  tags={','.join(sorted(ep.tags))}")
+        print("HLO rules:")
+        for rule in hlo_lint.HLO_RULES.values():
+            print(f"  {rule.name}: {rule.doc}")
+        print("source rules:")
+        for srule in source_lint.SOURCE_RULES.values():
+            print(f"  {srule.name}: {srule.doc}")
+        return 0
+
+    if args.rule:
+        known = set(hlo_lint.HLO_RULES) | set(source_lint.SOURCE_RULES)
+        unknown = [r for r in args.rule if r not in known]
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(unknown)} "
+                     f"(see --list)")
+
+    baseline = {}
+    if args.baseline and args.baseline.lower() != "none":
+        if os.path.exists(args.baseline):
+            baseline = load_baseline(args.baseline)
+        elif args.baseline != DEFAULT_BASELINE:
+            ap.error(f"baseline file not found: {args.baseline}")
+
+    progress = None if args.quiet else (
+        lambda msg: print(msg, file=sys.stderr, flush=True))
+    report = run_lint(
+        entry_filter=args.entry, rule_filter=args.rule,
+        do_hlo=not args.source_only, do_source=not args.hlo_only,
+        baseline=baseline, progress=progress)
+
+    if args.json_path == "-":
+        print(json.dumps(report.to_dict(), indent=2))
+    else:
+        if args.json_path:
+            with open(args.json_path, "w") as f:
+                json.dump(report.to_dict(), f, indent=2)
+                f.write("\n")
+        print(render(report))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

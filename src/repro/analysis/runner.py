@@ -1,0 +1,146 @@
+"""Sweep driver: entry-point matrix × HLO rules + source rules, with
+baseline suppression and report rendering (DESIGN.md §6).
+
+The baseline (``scripts/lint_baseline.json``) records INTENTIONAL
+violations — each as a stable finding key plus a one-line justification —
+so the sweep's exit code means "no NEW violations", not "no findings".
+Stale baseline entries (keys that no longer match anything) are reported
+as warnings: a suppression that outlived its violation should be deleted,
+but it never fails CI on its own.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import entrypoints, hlo_lint, source_lint
+from .hlo_lint import Finding
+
+
+@dataclasses.dataclass
+class LintReport:
+    findings: List[Finding]                      # new, unsuppressed
+    suppressed: List[Tuple[Finding, str]]        # (finding, justification)
+    stale_baseline: List[str]                    # keys matching nothing
+    n_entries: int
+    n_hlo_rules: int
+    n_source_rules: int
+    n_source_files: int
+    elapsed_s: float
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [{**f.to_dict(), "justification": why}
+                           for f, why in self.suppressed],
+            "stale_baseline": list(self.stale_baseline),
+            "n_entries": self.n_entries,
+            "n_hlo_rules": self.n_hlo_rules,
+            "n_source_rules": self.n_source_rules,
+            "n_source_files": self.n_source_files,
+            "elapsed_s": round(self.elapsed_s, 2),
+        }
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """{finding key -> one-line justification} from the suppression file."""
+    with open(path) as f:
+        data = json.load(f)
+    out: Dict[str, str] = {}
+    for item in data.get("suppressions", []):
+        key, why = item["key"], item.get("reason", "")
+        if not why:
+            raise ValueError(
+                f"baseline entry {key!r} has no justification — every "
+                f"intentional violation must say why (DESIGN §6)")
+        out[key] = why
+    return out
+
+
+def run_lint(*, entry_filter: Optional[Sequence[str]] = None,
+             rule_filter: Optional[Sequence[str]] = None,
+             do_hlo: bool = True, do_source: bool = True,
+             baseline: Optional[Dict[str, str]] = None,
+             progress=None) -> LintReport:
+    """The full sweep. ``entry_filter``: substrings selecting entry points;
+    ``rule_filter``: rule names (both engines); ``baseline``: key ->
+    justification map splitting findings into new vs suppressed."""
+    t0 = time.monotonic()
+    baseline = baseline or {}
+    raw: List[Finding] = []
+    n_entries = n_hlo_rules = n_source_rules = n_source_files = 0
+
+    if do_hlo:
+        hlo_rules = [r for r in hlo_lint.HLO_RULES.values()
+                     if rule_filter is None or r.name in rule_filter]
+        n_hlo_rules = len(hlo_rules)
+        if hlo_rules:
+            eps = entrypoints.iter_entry_points()
+            if entry_filter:
+                eps = [ep for ep in eps
+                       if any(s in ep.name for s in entry_filter)]
+            n_entries = len(eps)
+            for ep in eps:
+                if progress:
+                    progress(f"  lint {ep.name}")
+                raw.extend(hlo_lint.lint_entry(ep, rules=hlo_rules))
+
+    if do_source:
+        src_rules = [r.name for r in source_lint.SOURCE_RULES.values()
+                     if rule_filter is None or r.name in rule_filter]
+        n_source_rules = len(src_rules)
+        if src_rules:
+            files = list(source_lint._iter_src_files())
+            n_source_files = len(files)
+            if progress:
+                progress(f"  lint {n_source_files} source files")
+            raw.extend(source_lint.lint_sources(files, rules=src_rules))
+
+    new: List[Finding] = []
+    suppressed: List[Tuple[Finding, str]] = []
+    seen_keys = set()
+    for f in raw:
+        seen_keys.add(f.key)
+        if f.key in baseline:
+            suppressed.append((f, baseline[f.key]))
+        else:
+            new.append(f)
+    stale = sorted(k for k in baseline if k not in seen_keys)
+    return LintReport(
+        findings=new, suppressed=suppressed, stale_baseline=stale,
+        n_entries=n_entries, n_hlo_rules=n_hlo_rules,
+        n_source_rules=n_source_rules, n_source_files=n_source_files,
+        elapsed_s=time.monotonic() - t0)
+
+
+def render(report: LintReport) -> str:
+    lines = []
+    if report.findings:
+        lines.append(f"lint_hotpath: FAIL — {len(report.findings)} "
+                     f"finding(s) not in the baseline")
+        for f in report.findings:
+            lines.append(f"  [{f.rule}] {f.where}")
+            lines.append(f"      {f.detail}")
+            lines.append(f"      key: {f.key}")
+    else:
+        lines.append("lint_hotpath: OK")
+    if report.suppressed:
+        lines.append(f"  {len(report.suppressed)} baselined finding(s):")
+        for f, why in report.suppressed:
+            lines.append(f"    [{f.rule}] {f.where} — {why}")
+    for key in report.stale_baseline:
+        lines.append(f"  WARNING stale baseline entry (delete it): {key}")
+    lines.append(
+        f"  swept {report.n_entries} entry point(s) x "
+        f"{report.n_hlo_rules} HLO rule(s) + {report.n_source_files} "
+        f"source file(s) x {report.n_source_rules} source rule(s) in "
+        f"{report.elapsed_s:.1f}s")
+    return "\n".join(lines)

@@ -23,7 +23,7 @@ class StreamMetrics:
     issues device-side adds and stores device scalars, never forcing a host
     sync inside the ingest loop. The transfer happens once, lazily, when a
     property / ``summary()`` / convergence query reads the counters back
-    (DESIGN.md §6). Plain numpy inputs keep working and stay host-side.
+    (DESIGN.md §7). Plain numpy inputs keep working and stay host-side.
     """
 
     n: int = 0

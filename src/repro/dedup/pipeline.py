@@ -78,7 +78,7 @@ class DedupPipeline:
         if self.track_metrics:
             # device-side accumulation — no np.asarray here: forcing a host
             # sync per batch serializes the ingest loop against the device.
-            # StreamMetrics transfers once, at read-out (DESIGN.md §6).
+            # StreamMetrics transfers once, at read-out (DESIGN.md §7).
             self.metrics.update(
                 dup, truth_dup,
                 load=self.state.load, s_bits=self.cfg.s * self.cfg.k)

@@ -59,7 +59,8 @@ from ..core.packed import (clamped_run_counts, planes_saturating_add,
                            planes_saturating_sub, planes_set_value, split_pos)
 from ..core.state import FilterState
 from .common import (DEFAULT_CHUNK_B, DEFAULT_TILE_W, check_vmem_budget,
-                     chunk_or, largest_tile, popcount_sum)
+                     chunk_or, counter_vmem_words, largest_tile,
+                     popcount_sum)
 
 
 def make_fused_step(cfg, spec=None, *, tile_w: int = DEFAULT_TILE_W,
@@ -132,9 +133,10 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
     # and the insert operand — one OR word row for set-to-Max, d count planes
     # for saturating add (sbf: (2d+1)·W·4, swbf: 3d·W·4, cms/hh: 2d·W·4).
     # Accumulate mode (§3.9) swaps the delta planes for per-event operands,
-    # sized by the event counts at call time.
-    vmem_words = d + (0 if accumulate else
-                      (d if has_sub else 0) + (1 if set_mode else d))
+    # sized by the event counts at call time. The row count is shared with
+    # the static lint-rule mirror (common.fused_resident_bytes, DESIGN §6).
+    vmem_words = counter_vmem_words(d, has_sub=has_sub, set_mode=set_mode,
+                                    accumulate=accumulate)
     # saturating subtract/add clamp counts to the plane capacity; set-to-Max
     # events are single OR bits (cmax == 0 selects that form)
     sub_cmax = cmax if set_mode else (1 << d) - 1

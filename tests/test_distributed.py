@@ -320,8 +320,9 @@ def test_pipelined_stream_donates_filter_planes():
     Extends the single-device donation family
     (test_swbf_stream_donates_planes_and_ring)."""
     out = _run_subprocess("""
-        import re, json
+        import json
         import jax, jax.numpy as jnp
+        from repro.analysis import aliased_param_indices, entry_param_types
         from repro.compat import set_mesh
         from repro.core import DedupConfig
         from repro.dedup import ShardedDedup, ShardedDedupConfig
@@ -344,11 +345,8 @@ def test_pipelined_stream_donates_filter_planes():
                 ["1"] + [str(d) for d in arr.shape[1:]]) + "]"
         shapes = {"planes": perdev(state.bits, "u32"),
                   "ring": perdev(state.ring.events, "s32")}
-        sig = txt.split("entry_computation_layout={(", 1)[1].split(")->", 1)[0]
-        params = re.findall(r"[a-z]+\\d*\\[[\\d,]*\\]", sig)
-        alias = txt.split("input_output_alias={", 1)[1]
-        alias = alias.split("entry_computation_layout", 1)[0]
-        aliased = {int(p) for p in re.findall(r"\\{\\d+\\}: \\((\\d+),", alias)}
+        params = entry_param_types(txt)
+        aliased = aliased_param_indices(txt)
         print(json.dumps({k: params.index(s) in aliased
                           for k, s in shapes.items()}))
     """, devices=4)

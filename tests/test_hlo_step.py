@@ -1,71 +1,59 @@
-"""HLO-level contracts of the batched hot path (DESIGN.md §3):
+"""HLO-level contracts of the batched hot path (DESIGN.md §3, §6):
 
   * steady-state step for rlbsbf packed contains NO O(s) popcount/reduce over
     the filter buffer — load is tracked incrementally from scatter pre-values;
   * the donated filter state is aliased in place by the stream scan;
   * repeated ``run_stream`` calls reuse the cached compiled scan (no
     re-trace/re-compile per invocation).
-"""
 
-import re
+These invariants are enforced repo-wide by ``repro.analysis`` (the
+``python -m repro.analysis`` sweep over every entry point); the tests here
+pin the ORIGINAL acceptance configs — larger than the sweep's canonical
+sizes — through the same rule engine, so the rules and the historical bars
+can never drift apart.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
+from repro.analysis import lint_entry, reduce_operand_dims
+from repro.analysis.entrypoints import step_entry, stream_entry
+from repro.analysis.hlo_lint import Target
 from repro.core import Dedup, DedupConfig
-from repro.core.batched import make_batched_step
 from repro.core.engine import get_engine
-from repro.core.state import init_state
 
 CFG = dict(memory_bits=1 << 21, batch_size=8192, packed=True)
 
 
-def _compiled_step_hlo(cfg):
-    step = jax.jit(make_batched_step(cfg))
-    st = init_state(cfg)
-    args = (st, jax.ShapeDtypeStruct((cfg.batch_size,), jnp.uint32),
-            jax.ShapeDtypeStruct((cfg.batch_size,), jnp.bool_))
-    return step.lower(*args).compile().as_text()
-
-
-def _reduce_input_dims(hlo: str):
-    """Max dimension among operands of every reduce-class op in the HLO."""
-    dims = []
-    for line in hlo.splitlines():
-        if re.search(r"=\s*\S+\s+reduce(-window)?\(", line):
-            # operand shapes appear as dtype[d0,d1,...] inside the call args
-            call = line.split("reduce", 1)[1]
-            for shape in re.findall(r"\w+\[([0-9,]*)\]", call):
-                if shape:
-                    dims.extend(int(d) for d in shape.split(","))
-    return dims
+def _step_target(cfg):
+    return step_entry(cfg)
 
 
 def test_no_filter_sized_reduce_in_steady_state_step():
     """The acceptance bar: compiled rlbsbf-packed step must not reduce over
     any buffer as large as the filter (W words per row)."""
     cfg = DedupConfig.for_variant("rlbsbf", **CFG)
-    w = cfg.s_words
-    assert w > cfg.batch_size          # thresholds separated by construction
-    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
-    big = [d for d in dims if d >= w]
-    assert not big, f"O(s) reduction over the filter crept back in: {big}"
+    ep = _step_target(cfg)
+    assert ep.extra["separable"]       # thresholds separated by construction
+    assert lint_entry(ep, rules=["no-filter-sized-reduce"]) == []
 
 
 def test_debug_exact_load_does_popcount_reduce():
-    """Sanity of the detector: the escape hatch DOES reduce over the filter."""
+    """Sanity of the detector: the escape hatch DOES reduce over the filter,
+    and the rule fires on it (this is the finding the checked-in baseline
+    suppresses for the sweep's canonical debug entry)."""
     cfg = DedupConfig.for_variant("rlbsbf", debug_exact_load=True, **CFG)
-    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
-    assert any(d >= cfg.s_words for d in dims)
+    found = lint_entry(_step_target(cfg), rules=["no-filter-sized-reduce"])
+    assert [f.rule for f in found] == ["no-filter-sized-reduce"]
 
 
 def test_dense8_step_has_no_filter_sized_reduce():
     cfg = DedupConfig.for_variant("rlbsbf", memory_bits=1 << 21,
                                   batch_size=8192)
-    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
-    assert not [d for d in dims if d >= cfg.s]
+    ep = _step_target(cfg)
+    assert ep.extra["filter_elems"] == cfg.s
+    assert lint_entry(ep, rules=["no-filter-sized-reduce"]) == []
 
 
 # the counter-step bar (DESIGN §3.6): W well above every batch-event buffer
@@ -79,54 +67,43 @@ def test_no_filter_sized_reduce_in_counter_step():
     buffer as large as a plane (W words). The dense8 SBF branch's O(s)
     recount must NOT sneak back in through the plane path."""
     cfg = DedupConfig.for_variant("sbf", **COUNTER_CFG)
-    w = cfg.s_words
-    n_events = cfg.batch_size * max(cfg.sbf_p_effective, cfg.k)
-    assert n_events < w        # thresholds separated by construction
-    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
-    big = [d for d in dims if d >= w]
-    assert not big, f"O(s) reduction over the counter planes: {big}"
+    ep = _step_target(cfg)
+    assert ep.extra["separable"]       # B·P events below W by construction
+    assert lint_entry(ep, rules=["no-filter-sized-reduce"]) == []
 
 
 def test_counter_debug_exact_load_does_popcount_reduce():
-    """Detector sanity: the escape hatch DOES reduce over the planes."""
+    """Detector sanity: the escape hatch DOES reduce over the planes — via
+    the raw helper this time, pinning what the rule counts as a reduce."""
     cfg = DedupConfig.for_variant("sbf", debug_exact_load=True, **COUNTER_CFG)
-    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
-    assert any(d >= cfg.s_words for d in dims)
+    hlo = Target(_step_target(cfg)).compiled_text()
+    assert any(d >= cfg.s_words for d in reduce_operand_dims(hlo))
 
 
 def test_counter_stream_donates_and_aliases_plane_state():
     """The SBF plane state (d, 1, W) is donated and aliased in place by the
-    stream scan, same as the 1-bit filters (DESIGN §3.5/§3.6)."""
+    stream scan, same as the 1-bit filters (DESIGN §3.5/§3.6). The rule
+    checks EVERY state leaf against the compiled input_output_alias table —
+    strictly stronger than the old lowered-MLIR annotation grep."""
     cfg = DedupConfig.for_variant("sbf", **COUNTER_CFG)
-    d = Dedup(cfg)
-    st = d.init()
-    kb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.uint32)
-    vb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.bool_)
-    lowered = d._stream.lower(st, kb, vb).as_text()
-    m = re.search(
-        rf"%arg0: tensor<{cfg.n_planes}x1x{cfg.s_words}xui32>\s*\{{([^}}]*)\}}",
-        lowered)
-    assert m is not None and "tf.aliasing_output" in m.group(1), (
-        "counter plane state is not donated/aliased in the stream scan")
+    ep = stream_entry(cfg)
+    assert any(".bits" in label for label, _, _ in ep.leaves())
+    assert lint_entry(ep, rules=["state-donated-and-aliased"]) == []
 
 
 def test_stream_donates_and_aliases_filter_state():
     """run_stream's jitted scan declares the state buffers donated (aliased
     to outputs) — the k·s-bit filter is updated in place, not copied."""
     cfg = DedupConfig.for_variant("rlbsbf", **CFG)
-    d = Dedup(cfg)
-    st = d.init()
-    kb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.uint32)
-    vb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.bool_)
-    lowered = d._stream.lower(st, kb, vb).as_text()
-    # the uint32 filter argument must carry an output alias annotation
-    m = re.search(
-        rf"%arg0: tensor<{cfg.k}x{cfg.s_words}xui32>\s*\{{([^}}]*)\}}",
-        lowered)
-    assert m is not None and "tf.aliasing_output" in m.group(1), (
-        "filter state is not donated/aliased in the stream scan")
-    compiled = d._stream.lower(st, kb, vb).compile().as_text()
-    assert "input_output_alias" in compiled
+    ep = stream_entry(cfg)
+    assert lint_entry(ep, rules=["state-donated-and-aliased"]) == []
+    # the deliberately-undonated twin must trip the same rule
+    broken = stream_entry(cfg, donate=False)
+    assert "donated" not in broken.tags
+    # (rule gates on the 'donated' tag — force-apply it to the broken twin)
+    from repro.analysis.hlo_lint import HLO_RULES
+    found = HLO_RULES["state-donated-and-aliased"].check(Target(broken))
+    assert found and found[0].rule == "state-donated-and-aliased"
 
 
 def test_run_stream_does_not_recompile():

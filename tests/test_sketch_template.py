@@ -27,9 +27,8 @@ import pytest
 
 from repro.core import (ALL_VARIANTS, COUNTING_VARIANTS, Dedup, DedupConfig,
                         SKETCHES, get_spec)
-from repro.core.batched import make_batched_step, sbf_planes_3d
+from repro.core.batched import sbf_planes_3d
 from repro.core.packed import unpack_cells
-from repro.core.state import init_state
 
 SMALL = dict(memory_bits=1 << 12, batch_size=256)
 
@@ -392,30 +391,15 @@ def test_counting_serve_frontend_end_to_end():
 
 
 # --------------------------------------------------------------------- HLO //
-def _reduce_input_dims(hlo: str):
-    import re
-    dims = []
-    for line in hlo.splitlines():
-        if re.search(r"=\s*\S+\s+reduce(-window)?\(", line):
-            call = line.split("reduce", 1)[1]
-            for shape in re.findall(r"\w+\[([0-9,]*)\]", call):
-                if shape:
-                    dims.extend(int(d) for d in shape.split(","))
-    return dims
-
-
 @pytest.mark.parametrize("variant", COUNTING_VARIANTS)
 def test_no_filter_sized_reduce_in_counting_step(variant):
     """The generated counting steps keep the §3.1 discipline: load comes
-    from batch-event gathers, never an O(s) reduce over the planes."""
+    from batch-event gathers, never an O(s) reduce over the planes —
+    checked through the repo-wide rule engine (DESIGN §6)."""
+    from repro.analysis import lint_entry
+    from repro.analysis.entrypoints import step_entry
     cfg = DedupConfig.for_variant(variant, memory_bits=1 << 23,
                                   batch_size=1024)
-    w = cfg.s_words
-    assert cfg.batch_size * cfg.k < w      # thresholds separated
-    step = jax.jit(make_batched_step(cfg))
-    st = init_state(cfg)
-    args = (st, jax.ShapeDtypeStruct((cfg.batch_size,), jnp.uint32),
-            jax.ShapeDtypeStruct((cfg.batch_size,), jnp.bool_))
-    hlo = step.lower(*args).compile().as_text()
-    big = [d for d in _reduce_input_dims(hlo) if d >= w]
-    assert not big, f"O(s) reduction over the counting planes: {big}"
+    ep = step_entry(cfg)
+    assert ep.extra["separable"]           # thresholds separated
+    assert lint_entry(ep, rules=["no-filter-sized-reduce"]) == []

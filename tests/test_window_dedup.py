@@ -22,8 +22,6 @@ Step-level jnp/pallas ragged-valid parity moved to the spec-driven grid in
 tests/test_sketch_template.py (DESIGN.md §3.8).
 """
 
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -245,64 +243,42 @@ def test_migrate_rejects_window_and_width_mismatch():
 
 
 # --------------------------------------------------------------------- HLO //
-def _reduce_input_dims(hlo: str):
-    dims = []
-    for line in hlo.splitlines():
-        if re.search(r"=\s*\S+\s+reduce(-window)?\(", line):
-            call = line.split("reduce", 1)[1]
-            for shape in re.findall(r"\w+\[([0-9,]*)\]", call):
-                if shape:
-                    dims.extend(int(d) for d in shape.split(","))
-    return dims
-
-
 WINDOW_CFG = dict(memory_bits=1 << 23, batch_size=1024, window=4)
-
-
-def _compiled_step_hlo(cfg):
-    step = jax.jit(make_batched_step(cfg))
-    st = init_state(cfg)
-    args = (st, jax.ShapeDtypeStruct((cfg.batch_size,), jnp.uint32),
-            jax.ShapeDtypeStruct((cfg.batch_size,), jnp.bool_))
-    return step.lower(*args).compile().as_text()
 
 
 def test_no_filter_sized_reduce_in_swbf_step():
     """The swbf step's load is tracked from batch-event pre/post gathers —
     the compiled steady-state step must not reduce over any buffer as large
-    as a plane (W words)."""
+    as a plane (W words); checked via the rule engine (DESIGN §6)."""
+    from repro.analysis import lint_entry
+    from repro.analysis.entrypoints import step_entry
     cfg = DedupConfig.for_variant("swbf", **WINDOW_CFG)
-    w = cfg.s_words
-    assert cfg.batch_size * cfg.k < w      # thresholds separated
-    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
-    big = [d for d in dims if d >= w]
-    assert not big, f"O(s) reduction over the window planes: {big}"
+    ep = step_entry(cfg)
+    assert ep.extra["separable"]           # thresholds separated
+    assert lint_entry(ep, rules=["no-filter-sized-reduce"]) == []
 
 
 def test_swbf_debug_exact_load_does_popcount_reduce():
     """Detector sanity: the escape hatch DOES reduce over the planes."""
+    from repro.analysis import Target, reduce_operand_dims
+    from repro.analysis.entrypoints import step_entry
     cfg = DedupConfig.for_variant("swbf", debug_exact_load=True, **WINDOW_CFG)
-    dims = _reduce_input_dims(_compiled_step_hlo(cfg))
-    assert any(d >= cfg.s_words for d in dims)
+    hlo = Target(step_entry(cfg)).compiled_text()
+    assert any(d >= cfg.s_words for d in reduce_operand_dims(hlo))
 
 
 def test_swbf_stream_donates_planes_and_ring():
     """The stream scan donates and aliases BOTH the plane stack and the ring
     buffers in place — a windowed stream must not copy window·d·W words per
-    dispatch."""
+    dispatch. The rule checks every state leaf (plane stack AND ring)
+    against the compiled input_output_alias table."""
+    from repro.analysis import lint_entry
+    from repro.analysis.entrypoints import stream_entry
     cfg = DedupConfig.for_variant("swbf", **WINDOW_CFG)
-    d = Dedup(cfg)
-    st = d.init()
-    kb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.uint32)
-    vb = jax.ShapeDtypeStruct((4, cfg.batch_size), jnp.bool_)
-    lowered = d._stream.lower(st, kb, vb).as_text()
-    w, dd, win = cfg.s_words, cfg.n_planes, cfg.window
-    for shape, label in ((f"{dd}x1x{w}", "plane stack"),
-                         (f"{win}x{cfg.batch_size * cfg.k}", "ring events")):
-        m = re.search(rf"%arg\d+: tensor<{shape}x[us]?i32>\s*\{{([^}}]*)\}}",
-                      lowered)
-        assert m is not None and "tf.aliasing_output" in m.group(1), (
-            f"{label} is not donated/aliased in the stream scan")
+    ep = stream_entry(cfg)
+    labels = [label for label, _, _ in ep.leaves()]
+    assert any(".ring" in lb for lb in labels), labels   # ring IS a leaf
+    assert lint_entry(ep, rules=["state-donated-and-aliased"]) == []
 
 
 # ------------------------------------------------------------------ config //
