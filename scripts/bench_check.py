@@ -6,6 +6,7 @@
     PYTHONPATH=src python scripts/bench_check.py --counter [--tol 0.35]
     PYTHONPATH=src python scripts/bench_check.py --rebalance
     PYTHONPATH=src python scripts/bench_check.py --template
+    PYTHONPATH=src python scripts/bench_check.py --tenants
     PYTHONPATH=src python scripts/bench_check.py --pipeline
     PYTHONPATH=src python scripts/bench_check.py --all
 
@@ -58,6 +59,14 @@ the sharded tolerance (async wall-clock on a shared CPU jitters).
 replaced a hand-written one holds >= 95% of the frozen pre-template row's
 elems/s (DESIGN §3.8), and the cms/hh counting rows are present.
 
+``--tenants`` validates the committed BENCH_tenants.json (emitted by
+``python -m benchmarks.tenant_fleet``) against the DESIGN §4.6 acceptance
+bar: at T=256 the one-launch tenant fleet must hold >= 2x the per-tenant
+Python loop's elems/s, every tenant-count row must be present with
+positive throughput on both sides, zero slot overflow, and the
+one-dispatch stream contract (stream_cache == 1). Fleet elems/s
+trajectory vs the frozen baseline is checked at the sharded tolerance.
+
 ``--pipeline`` validates the committed BENCH_pipeline.json (emitted by
 ``python -m benchmarks.pipeline_throughput``) against the DESIGN §4.5
 acceptance bar: pipelined sharded ``run_stream`` >= 1.25x serial elems/s
@@ -66,7 +75,7 @@ deterministic digest grid — pipelined == serial, kernel_accumulate
 on == off, and elastic == the 1-device oracle, on both backends.
 
 ``--all`` runs every validate-only check (sharded/counter/window/
-rebalance/serving/template/pipeline) in one call — the CI gate; worst exit
+rebalance/serving/template/pipeline/tenants) in one call — the CI gate; worst exit
 code wins, and a closing summary names each missing or failed artifact.
 The plain re-measuring mode stays a separate local command.
 
@@ -398,6 +407,58 @@ def check_pipeline() -> int:
     return 1 if (fail or problems) else 0
 
 
+def check_tenants(tol: float) -> int:
+    """BENCH_tenants.json: the DESIGN §4.6 acceptance bar — the one-launch
+    tenant fleet >= 2x the per-tenant Python loop's elems/s at T=256, every
+    tenant-count row present with positive throughput on both sides, zero
+    slot overflow, the one-dispatch stream contract intact, and the fleet
+    elems/s trajectory vs the frozen baseline. Validates the COMMITTED
+    file only; nothing re-measured."""
+    from benchmarks.tenant_fleet import (BENCH_PATH as TENANTS_PATH, GATE_T,
+                                         GATE_SPEEDUP, TENANT_COUNTS)
+
+    if not os.path.exists(TENANTS_PATH):
+        print(f"bench_check: no committed artifact at {TENANTS_PATH} — run "
+              f"`python -m benchmarks.tenant_fleet --fast` first")
+        return 2
+    with open(TENANTS_PATH) as f:
+        doc = json.load(f)
+    baseline, current = doc.get("baseline", {}), doc.get("current", {})
+    fail = False
+    print(f"{'row':10s} {'loop':>12s} {'fleet':>12s} {'speedup':>8s}")
+    for t in TENANT_COUNTS:
+        key = f"T_{t}"
+        rec = current.get(key, {})
+        fleet, loop = rec.get("fleet", {}), rec.get("loop", {})
+        if "eps" not in fleet or "eps" not in loop:
+            print(f"{key:10s} {'—':>12s} {'MISSING':>12s}   REGRESSION")
+            fail = True
+            continue
+        problems = []
+        if fleet["eps"] <= 0 or loop["eps"] <= 0:
+            problems.append("non-positive eps")
+        if fleet.get("stream_cache") != 1:
+            problems.append(f"stream_cache={fleet.get('stream_cache')}")
+        if fleet.get("overflow"):
+            problems.append(f"slot overflow={fleet['overflow']} "
+                            f"(fleet dropped lanes)")
+        ref = baseline.get(key, {}).get("fleet", {}).get("eps")
+        if ref and fleet["eps"] < (1.0 - tol) * ref:
+            problems.append(f"fleet eps {fleet['eps']:.0f} < (1-{tol}) * "
+                            f"baseline {ref:.0f}")
+        status = ("  REGRESSION(" + "; ".join(problems) + ")" if problems
+                  else "")
+        print(f"{key:10s} {loop['eps']:12.0f} {fleet['eps']:12.0f} "
+              f"{rec.get('speedup', 0.0):7.2f}x{status}")
+        fail = fail or bool(problems)
+    gate = current.get(f"T_{GATE_T}", {}).get("speedup") or 0.0
+    verdict = "ok" if gate >= GATE_SPEEDUP else \
+        f"REGRESSION(< {GATE_SPEEDUP:.0f}x)"
+    print(f"tenants gate (T={GATE_T}): fleet/loop = {gate:.2f}x "
+          f"(>= {GATE_SPEEDUP:.0f}x required)   {verdict}")
+    return 1 if (fail or gate < GATE_SPEEDUP) else 0
+
+
 def check_all(tol: float | None) -> int:
     """Validate EVERY committed BENCH artifact in one call (the CI gate):
     worst exit code wins, each section labelled, and a closing summary that
@@ -414,6 +475,7 @@ def check_all(tol: float | None) -> int:
         ("serving", lambda: check_serving(0.35 if tol is None else tol)),
         ("template", check_template),
         ("pipeline", check_pipeline),
+        ("tenants", lambda: check_tenants(0.35 if tol is None else tol)),
     )
     worst, missing, failed = 0, [], []
     for name, fn in checks:
@@ -451,6 +513,7 @@ _REGEN = {
     "serving": "serving_qps --fast",
     "template": "template_throughput",
     "pipeline": "pipeline_throughput --fast",
+    "tenants": "tenant_fleet --fast",
 }
 
 
@@ -505,6 +568,11 @@ def main(argv=None) -> int:
                     help="validate BENCH_template.json (templated steps "
                          ">= 95% of the frozen pre-template rows' elems/s, "
                          "DESIGN §3.8)")
+    ap.add_argument("--tenants", action="store_true",
+                    help="validate BENCH_tenants.json (one-launch tenant "
+                         "fleet >= 2x the per-tenant Python loop at T=256, "
+                         "zero slot overflow, one-dispatch contract, "
+                         "DESIGN §4.6)")
     ap.add_argument("--pipeline", action="store_true",
                     help="validate BENCH_pipeline.json (pipelined sharded "
                          "stream >= 1.25x serial at 8 devices + the "
@@ -518,6 +586,8 @@ def main(argv=None) -> int:
         return check_all(args.tol)
     if args.template:
         return check_template()
+    if args.tenants:
+        return check_tenants(0.35 if args.tol is None else args.tol)
     if args.pipeline:
         return check_pipeline()
     if args.rebalance:

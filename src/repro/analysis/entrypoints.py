@@ -283,6 +283,96 @@ def serving_entry(*, variant: str = "rlbsbf", width: int = 256,
         retrace_probe=retrace if probe else None, extra=_thresholds(cfg))
 
 
+def fleet_step_entry(*, variant: str = "rlbsbf", backend: str = "jnp",
+                     n_tenants: int = 8, probe: bool = False,
+                     name: Optional[str] = None) -> EntryPoint:
+    """The tenant fleet's mixed-batch step (``FleetDedup.process``, DESIGN
+    §4.6): route-by-tenant + ONE vmapped templated step over the stacked
+    (T, ...) state. Not donated (interactive contract, like ``step/``);
+    the probe checks the per-width compile cache stays at one entry."""
+    if name is None:
+        name = f"fleet-step/{variant}/{backend}/t{n_tenants}"
+    cfg = _canon_cfg(variant, "planes", backend=backend,
+                     n_tenants=n_tenants)
+
+    def make_fleet():
+        from ..core.fleet import FleetDedup
+        return FleetDedup(cfg)
+
+    def build():
+        from ..core.fleet import init_fleet_state
+        fleet = make_fleet()
+        st = jax.eval_shape(functools.partial(
+            init_fleet_state, cfg, event_capacity=fleet.capacity))
+        b = cfg.batch_size
+        k = jax.ShapeDtypeStruct((b,), jnp.uint32)
+        t = jax.ShapeDtypeStruct((b,), jnp.int32)
+        v = jax.ShapeDtypeStruct((b,), jnp.bool_)
+        return jax.jit(fleet._fleet_fn()).lower(st, k, t, v)
+
+    def retrace():
+        fleet = make_fleet()
+        st = fleet.init()
+        rng = np.random.default_rng(2)
+        keys = rng.integers(0, 1 << 20, cfg.batch_size, dtype=np.uint32)
+        tens = rng.integers(0, n_tenants, cfg.batch_size).astype(np.int32)
+        for _ in range(2):
+            st, _ = fleet.process(st, jnp.asarray(keys), jnp.asarray(tens))
+        if fleet.process_cache_size() != 1:
+            return [f"replaying the same-width mixed batch grew the fleet "
+                    f"step cache to {fleet.process_cache_size()} (one "
+                    f"trace per width expected)"]
+        return []
+
+    return EntryPoint(
+        name=name, tags=frozenset({"step", "fleet", backend}), cfg=cfg,
+        build=build, retrace_probe=retrace if probe else None,
+        extra=_thresholds(cfg))
+
+
+def fleet_stream_entry(*, variant: str = "rlbsbf", backend: str = "jnp",
+                       n_tenants: int = 8,
+                       name: Optional[str] = None) -> EntryPoint:
+    """The fleet's donated stream scan (``FleetDedup.run_stream``, §4.6) —
+    the whole mixed-tenant stream in one dispatch, stacked state aliased in
+    place like every other donated scan."""
+    if name is None:
+        name = f"fleet-stream/{variant}/{backend}/t{n_tenants}"
+    cfg = _canon_cfg(variant, "planes", backend=backend,
+                     n_tenants=n_tenants)
+    ctx = _lazy(lambda: _fleet_stream_ctx(cfg))
+
+    return EntryPoint(
+        name=name,
+        tags=frozenset({"stream", "fleet", "donated", backend}), cfg=cfg,
+        build=lambda: ctx()["lowered"], leaves=lambda: ctx()["leaves"],
+        extra=_thresholds(cfg))
+
+
+def _fleet_stream_ctx(cfg: DedupConfig):
+    from ..core.fleet import FleetDedup, init_fleet_state
+    fleet = FleetDedup(cfg)
+    st = jax.eval_shape(functools.partial(
+        init_fleet_state, cfg, event_capacity=fleet.capacity))
+    b = cfg.batch_size
+    kb = jax.ShapeDtypeStruct((STREAM_BATCHES, b), jnp.uint32)
+    tb = jax.ShapeDtypeStruct((STREAM_BATCHES, b), jnp.int32)
+    vb = jax.ShapeDtypeStruct((STREAM_BATCHES, b), jnp.bool_)
+    fleet_step = fleet._fleet_fn()
+
+    def stream(state, kb, tb, vb):
+        def body(state, xs):
+            kk, tt, vv = xs
+            state, res = fleet_step(state, kk, tt, vv)
+            return state, (res.dup, res.overflow)
+
+        state, (dups, ovfs) = jax.lax.scan(body, state, (kb, tb, vb))
+        return state, dups, ovfs
+
+    lowered = jax.jit(stream, donate_argnums=0).lower(st, kb, tb, vb)
+    return {"lowered": lowered, "leaves": _leaf_spec(st)}
+
+
 # ------------------------------------------------------------------ matrix
 
 
@@ -327,6 +417,13 @@ def iter_entry_points() -> List[EntryPoint]:
     eps.append(sharded_stream_entry(pipeline=True, probe=True))
     eps.append(sharded_stream_entry(pipeline=True, rebalance_buckets=4))
     eps.append(serving_entry())
+    # tenant fleets (§4.6): the routed vmapped step on both backends plus
+    # one representative donated fleet stream per family
+    eps.append(fleet_step_entry(probe=True))
+    eps.append(fleet_step_entry(backend="pallas"))
+    eps.append(fleet_step_entry(variant="swbf"))
+    eps.append(fleet_stream_entry())
+    eps.append(fleet_stream_entry(variant="sbf"))
     return eps
 
 

@@ -30,10 +30,17 @@ class LintReport:
     n_source_rules: int
     n_source_files: int
     elapsed_s: float
+    partial: bool = False                        # filtered sweep — stale
+                                                 # keys may just be unswept
 
     @property
     def ok(self) -> bool:
-        return not self.findings
+        # a stale suppression on a FULL sweep fails: a baseline entry that
+        # matches nothing is either a fixed violation whose justification
+        # now misleads, or a key drifted out from under its suppression —
+        # both must be cleaned up, not warned about forever
+        return not self.findings and not (self.stale_baseline
+                                          and not self.partial)
 
     def to_dict(self) -> dict:
         return {
@@ -114,18 +121,26 @@ def run_lint(*, entry_filter: Optional[Sequence[str]] = None,
         else:
             new.append(f)
     stale = sorted(k for k in baseline if k not in seen_keys)
+    partial = bool(entry_filter or rule_filter
+                   or not do_hlo or not do_source)
     return LintReport(
         findings=new, suppressed=suppressed, stale_baseline=stale,
         n_entries=n_entries, n_hlo_rules=n_hlo_rules,
         n_source_rules=n_source_rules, n_source_files=n_source_files,
-        elapsed_s=time.monotonic() - t0)
+        elapsed_s=time.monotonic() - t0, partial=partial)
 
 
 def render(report: LintReport) -> str:
     lines = []
-    if report.findings:
-        lines.append(f"lint_hotpath: FAIL — {len(report.findings)} "
-                     f"finding(s) not in the baseline")
+    if not report.ok:
+        parts = []
+        if report.findings:
+            parts.append(f"{len(report.findings)} finding(s) not in the "
+                         f"baseline")
+        if report.stale_baseline and not report.partial:
+            parts.append(f"{len(report.stale_baseline)} stale baseline "
+                         f"suppression(s)")
+        lines.append("lint_hotpath: FAIL — " + "; ".join(parts))
         for f in report.findings:
             lines.append(f"  [{f.rule}] {f.where}")
             lines.append(f"      {f.detail}")
@@ -137,7 +152,9 @@ def render(report: LintReport) -> str:
         for f, why in report.suppressed:
             lines.append(f"    [{f.rule}] {f.where} — {why}")
     for key in report.stale_baseline:
-        lines.append(f"  WARNING stale baseline entry (delete it): {key}")
+        tag = ("WARNING (filtered sweep — may just be unswept)"
+               if report.partial else "FAIL")
+        lines.append(f"  {tag} stale baseline entry (delete it): {key}")
     lines.append(
         f"  swept {report.n_entries} entry point(s) x "
         f"{report.n_hlo_rules} HLO rule(s) + {report.n_source_files} "

@@ -153,8 +153,18 @@ class CheckpointManager:
         at save time (e.g. the filter layout facts from
         ``repro.checkpoint.layout_meta``, which is how a dense8 checkpoint
         announces itself to a plane-layout engine for migration)."""
-        with open(os.path.join(self._path(step), "meta.json")) as f:
-            return json.load(f)
+        path = os.path.join(self._path(step), "meta.json")
+        with open(path) as f:
+            try:
+                return json.load(f)
+            except json.JSONDecodeError as e:
+                # a meta.json inside a committed step_ dir can only be
+                # short-written by the filesystem (the atomic-commit rename
+                # never publishes a partial dir) — refuse loudly rather
+                # than hand the caller a half-parsed layout
+                raise ValueError(
+                    f"checkpoint meta.json truncated or corrupt at {path}: "
+                    f"{e}") from e
 
     def restore(self, step: int, template: Any) -> Any:
         path = self._path(step)

@@ -34,7 +34,8 @@ from ..core.packed import pack_bits, pack_cells, unpack_bits, unpack_cells
 from ..core.state import FilterState, init_router
 
 __all__ = ["layout_meta", "migrate_filter_state", "router_meta",
-           "migrate_sharded_state"]
+           "migrate_sharded_state", "tenant_meta", "check_tenant_meta",
+           "export_tenant", "import_tenant"]
 
 
 def _fresh(x):
@@ -95,6 +96,103 @@ def router_meta(state: FilterState) -> dict:
         "router_assign": assign.tolist(),
         "router_n_rebalances": int(np.asarray(state.router.n_rebalances)),
     }
+
+
+def tenant_meta(cfg: DedupConfig, params=None) -> dict:
+    """The tenant-fleet facts a checkpoint must carry (DESIGN §4.6): the
+    tenant count, the stacking tag, and — when the fleet runs heterogeneous
+    per-tenant knobs — the ``TenantParams`` rows, host-readable from
+    meta.json so an operator can see every tenant's Max/threshold/window/
+    capacity without loading arrays. Stamp via
+    ``CheckpointManager.save(extra_meta={**layout_meta(cfg),
+    **tenant_meta(cfg, fleet.params)})``."""
+    meta = {
+        "tenant_count": cfg.n_tenants,
+        "tenant_layout": "stacked" if cfg.n_tenants > 1 else "single",
+    }
+    if params is not None:
+        meta["tenant_params"] = {
+            k: np.asarray(v).tolist() for k, v in params._asdict().items()}
+    return meta
+
+
+def check_tenant_meta(meta: dict, cfg: DedupConfig) -> None:
+    """Refuse to restore a checkpoint into the wrong fleet shape — the two
+    corruption/mismatch classes a stacked state can hit (§4.6). Raises
+    ``ValueError`` (tests/test_migrate_negative.py pins the messages);
+    silently restoring would mis-slice every tenant's filter."""
+    tag = meta.get("tenant_layout", "single")
+    if tag not in ("single", "stacked"):
+        raise ValueError(
+            f"unrecognized tenant layout tag {tag!r} — checkpoint corrupt "
+            f"or written by a newer format (expected 'single' or 'stacked'; "
+            f"DESIGN §4.6)")
+    n = int(meta.get("tenant_count", 1))
+    if n != cfg.n_tenants:
+        raise ValueError(
+            f"tenant-count mismatch: checkpoint holds {n} tenant(s), the "
+            f"restoring config expects {cfg.n_tenants} — a stacked state "
+            f"cannot be re-sliced implicitly; export/import tenants "
+            f"explicitly (export_tenant/import_tenant, DESIGN §4.6)")
+    if tag == "stacked" and n <= 1:
+        raise ValueError(
+            f"tenant layout tag 'stacked' contradicts tenant_count {n} — "
+            f"checkpoint meta corrupt (DESIGN §4.6)")
+
+
+def export_tenant(state: FilterState, t: int) -> FilterState:
+    """Slice ONE tenant's self-contained filter out of a stacked fleet
+    state — its bits, position, load, tenant-folded rng and ring row — as a
+    single-tenant ``FilterState`` a classic engine (or another fleet's
+    ``import_tenant``) can run. Fresh buffers (donation safety)."""
+    n = _stacked_tenants(state)
+    if not (0 <= t < n):
+        raise ValueError(f"tenant {t} out of range for a fleet of {n}")
+    return jax.tree.map(lambda x: _fresh(x[t]), state)
+
+
+def import_tenant(state: FilterState, t: int, sub: FilterState
+                  ) -> FilterState:
+    """Write a single-tenant filter into row ``t`` of a stacked fleet state
+    — the inverse of ``export_tenant`` (tenant migration between fleets,
+    §4.6). Every leaf of ``sub`` must match the fleet's per-tenant shape.
+    Returns a new state with fresh buffers; the fleet's other tenants are
+    untouched."""
+    n = _stacked_tenants(state)
+    if not (0 <= t < n):
+        raise ValueError(f"tenant {t} out of range for a fleet of {n}")
+
+    def leaf(x, s):
+        is_key = False
+        try:
+            is_key = jax.dtypes.issubdtype(x.dtype, jax.dtypes.prng_key)
+        except Exception:                              # pragma: no cover
+            pass
+        if is_key:
+            x, s = jnp.asarray(jax.random.key_data(x)), \
+                jnp.asarray(jax.random.key_data(s))
+        else:
+            x, s = jnp.asarray(x), jnp.asarray(s)
+        if s.shape != x.shape[1:]:
+            raise ValueError(
+                f"tenant state shape mismatch: fleet row is {x.shape[1:]}, "
+                f"import is {s.shape} — same config required (§4.6)")
+        out = jnp.array(x.at[t].set(s.astype(x.dtype)), copy=True)
+        return jax.random.wrap_key_data(out) if is_key else out
+
+    return jax.tree.map(leaf, state, sub)
+
+
+def _stacked_tenants(state: FilterState) -> int:
+    """Tenant count of a stacked fleet state; refuses single-filter states
+    (their position is a scalar — nothing to slice)."""
+    pos = jnp.asarray(state.position)
+    if pos.ndim != 1:
+        raise ValueError(
+            "not a stacked tenant-fleet state: expected a (T,) position "
+            "axis (core.fleet.init_fleet_state); single-filter and sharded "
+            "states have no tenant axis to slice (DESIGN §4.6)")
+    return int(pos.shape[0])
 
 
 def migrate_sharded_state(state: FilterState, dst_shards: int) -> FilterState:

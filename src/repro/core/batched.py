@@ -349,6 +349,19 @@ def make_swbf_planes_step(cfg: DedupConfig) -> BatchedStep:
     return make_counter_planes_step(cfg, get_spec("swbf"))
 
 
+class TenantStepParams(NamedTuple):
+    """Per-tenant numeric knobs broadcast into ONE fleet launch (DESIGN
+    §4.6): scalar int32 leaves inside a step (one tenant's row), stacked
+    (T,) arrays at the fleet level — ``jax.vmap`` maps the tenant axis.
+    Only value-like knobs ride here; anything shape-affecting (k, d, s, W,
+    ring length) stays fleet-wide static so every tenant traces the same
+    program. ``max_value`` must share ``cfg.sbf_max``'s bit_length (d is
+    static); ``window`` must be <= the fleet ring length ``cfg.window``."""
+    max_value: jnp.ndarray      # () int32 — sbf set-to-Max counter ceiling
+    threshold: jnp.ndarray      # () int32 — cms/hh verdict threshold
+    window: jnp.ndarray         # () int32 — swbf effective window (batches)
+
+
 class CounterStepDeltas(NamedTuple):
     """A counter-family batch reduced to the plane algebra's operands
     (DESIGN.md §3.8). Built per-spec (``core.sketch``) and consumed
@@ -367,7 +380,8 @@ class CounterStepDeltas(NamedTuple):
     ring_payload: Optional[CountBatchDeltas]  # swbf: this batch's ring slot
 
 
-def make_counter_planes_step(cfg: DedupConfig, spec) -> BatchedStep:
+def make_counter_planes_step(cfg: DedupConfig, spec,
+                             params_aware: bool = False) -> BatchedStep:
     """The counter-family step generator (DESIGN.md §3.8): one jnp ingest
     step over the (d, W) bit-plane algebra, specialized by a ``SketchSpec``
     — probe op (nonzero bit vs d-bit cell value), decision fn, event-delta
@@ -375,7 +389,15 @@ def make_counter_planes_step(cfg: DedupConfig, spec) -> BatchedStep:
     exact incremental nonzero-cell load shared by every sketch. sbf, swbf,
     cms and hh are all THIS function under different specs; the fused
     Pallas twin is generated from the same spec by
-    ``kernels.fused_template.make_fused_step``."""
+    ``kernels.fused_template.make_fused_step``.
+
+    ``params_aware=True`` (the fleet path, DESIGN §4.6) appends a
+    ``TenantStepParams`` argument: step(state, keys, valid, tp). The traced
+    per-tenant scalars replace the static config values at the three
+    value-like seams — the cms/hh verdict threshold, the sbf set-to-Max
+    ceiling, and the swbf ring-slot advance modulus — leaving every shape
+    and every rng draw untouched, so one trace serves all tenants under
+    ``jax.vmap``."""
     cfg = cfg.validate()
     seeds = derive_seeds(cfg.seed, cfg.k, channel=0)
     bseeds = (derive_seeds(cfg.seed, cfg.k, channel=1)
@@ -385,7 +407,8 @@ def make_counter_planes_step(cfg: DedupConfig, spec) -> BatchedStep:
     decide = spec.make_decide(cfg)
     events_fn = spec.make_events(cfg)
 
-    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray,
+             tp: Optional[TenantStepParams] = None):
         b = keys.shape[0]
         planes = sbf_planes_3d(state.bits)[:, 0, :]               # (d, W)
         pos = hash_positions(keys, seeds, s, cfg.block_bits, bseeds)   # (B, k)
@@ -396,7 +419,10 @@ def make_counter_planes_step(cfg: DedupConfig, spec) -> BatchedStep:
             w_idx, mask = split_pos(pos)
             vals = (nzw[w_idx] & mask) != 0                       # (B, k) bool
         seen = intra_batch_seen(keys, valid) if spec.uses_seen else None
-        dup = decide(vals, valid, seen)
+        if params_aware and spec.thresholded:
+            dup = decide(vals, valid, seen, t=tp.threshold)
+        else:
+            dup = decide(vals, valid, seen)
         if spec.draw is not None:
             rng, rnd = spec.draw(cfg, state.rng, b)
         else:
@@ -408,7 +434,8 @@ def make_counter_planes_step(cfg: DedupConfig, spec) -> BatchedStep:
         if ev.set_delta is not None:
             # set-to-Max writes the sketch's counter ceiling (sbf_max), which
             # may sit below the plane capacity 2^d - 1
-            new = planes_set_value(new, ev.set_delta, cfg.sbf_max)
+            cmax = tp.max_value if params_aware else cfg.sbf_max
+            new = planes_set_value(new, ev.set_delta, cmax)
         if ev.add_planes is not None:
             new = planes_saturating_add(new, ev.add_planes)
         if cfg.debug_exact_load:
@@ -443,7 +470,8 @@ def make_counter_planes_step(cfg: DedupConfig, spec) -> BatchedStep:
         bits = new[:, None, :] if not squeeze else new
         ring = state.ring
         if ev.ring_payload is not None:
-            ring = ring_push(ring, ev.ring_payload, cfg.window)
+            window = tp.window if params_aware else cfg.window
+            ring = ring_push(ring, ev.ring_payload, window)
         n_valid = valid.sum(dtype=jnp.int32)
         new_state = FilterState(bits, state.position + n_valid, load, rng,
                                 ring)
@@ -566,17 +594,27 @@ def make_bitset_step(cfg: DedupConfig, spec) -> BatchedStep:
     return step
 
 
-def make_templated_step(cfg: DedupConfig, spec=None) -> BatchedStep:
+def make_templated_step(cfg: DedupConfig, spec=None,
+                        params_aware: bool = False) -> BatchedStep:
     """The ONE jnp step factory (DESIGN.md §3.8): resolve the variant's
     ``SketchSpec`` and hand it to the family's generator. Pass ``spec`` to
-    run an unregistered/experimental sketch through the same machinery."""
+    run an unregistered/experimental sketch through the same machinery.
+
+    ``params_aware=True`` returns the fleet-signature step
+    ``(state, keys, valid, TenantStepParams) -> (state, res)`` (§4.6): the
+    counter family threads the traced per-tenant scalars; the bitset family
+    — whose decision rule has no value-like config knob — accepts and
+    ignores them, keeping the vmapped fleet signature uniform."""
     cfg = cfg.validate()
     if spec is None:
         from .sketch import get_spec
         spec = get_spec(cfg.variant)
     if spec.family == "counter":
-        return make_counter_planes_step(cfg, spec)
-    return make_bitset_step(cfg, spec)
+        return make_counter_planes_step(cfg, spec, params_aware=params_aware)
+    step = make_bitset_step(cfg, spec)
+    if not params_aware:
+        return step
+    return lambda state, keys, valid, tp: step(state, keys, valid)
 
 
 def make_estimate_fn(cfg: DedupConfig):

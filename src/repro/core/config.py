@@ -145,6 +145,17 @@ class DedupConfig:
                                          # always >= 1, so use > 1.0);
                                          # 0 disables the load monitor —
                                          # buckets never move.
+    # --- multi-tenant fleets (DESIGN §4.6) ---
+    n_tenants: int = 1                   # logical filters stacked on a
+                                         # leading tenant axis: the fleet
+                                         # state is T independent filters of
+                                         # ``memory_bits`` each, stepped by
+                                         # ONE vmapped launch per mixed batch
+                                         # (core/fleet.py). 1 = the classic
+                                         # single-filter engines; shape knobs
+                                         # (k, d, s, W, window length) stay
+                                         # fleet-wide — per-tenant numeric
+                                         # knobs ride TenantParams.
 
     # ------------------------------------------------------------------ //
     @property
@@ -274,6 +285,13 @@ class DedupConfig:
             raise ValueError(
                 "rebalance_threshold needs elastic routing: set "
                 "rebalance_buckets > 0 (DESIGN §4.4)")
+        if self.n_tenants < 1:
+            raise ValueError("n_tenants must be >= 1 (DESIGN §4.6)")
+        if self.n_tenants > 1 and self.n_tenants & (self.n_tenants - 1):
+            raise ValueError(
+                f"n_tenants {self.n_tenants} must be a power of two — the "
+                f"tenant id rides the top bits of the tenant-tagged key on "
+                f"the sharded path (DESIGN §4.6)")
         return self
 
     @staticmethod

@@ -1,0 +1,322 @@
+"""Multi-tenant filter fleets: T logical filters, ONE launch (DESIGN §4.6).
+
+The paper's motivating domains (CDRs, transactions, click streams) are not
+one giant filter but many per-tenant/per-segment filters with independent
+capacity and windows. This module generalizes the elastic-bucket layout
+(DESIGN §4.4 — self-contained sub-filters behind a router) into a
+first-class tenant axis on the single-device engine:
+
+  * **Stacked state** — ``init_fleet_state`` broadcasts one
+    ``init_state(cfg)`` template to a leading ``(T, ...)`` axis and folds
+    each tenant's rng on its TENANT id (``jax.random.fold_in``), exactly
+    the bucket-id fold of the elastic path: tenant t's randomness stream is
+    independent of every other tenant's traffic by construction.
+  * **One vmapped launch** — a mixed batch of ``(keys, tenant)`` lanes is
+    routed to per-tenant slot rows of a fixed width C (value-free-sort
+    rank, the §3.1 discipline — O(B log B) in the batch, independent of T)
+    and the whole (T, C) grid steps in ONE ``jax.vmap`` of the
+    params-aware templated step (``core.batched.make_templated_step`` /
+    ``kernels.fused_template.make_fused_step`` — the Pallas kernel batches
+    by grid extension, so the fleet is a single launch on both backends).
+  * **Per-tenant config broadcast** — ``TenantParams`` stacks the
+    value-like knobs (sbf ``Max``, cms/hh threshold, swbf window, admission
+    capacity) as (T,) rows; shape-affecting knobs (k, d, s, W, ring length)
+    stay fleet-wide so every tenant shares one trace.
+
+The isolation theorem (proved by tests/test_tenants.py): tenant t's
+verdicts depend only on tenant t's own per-step element groups. A fleet
+step presents tenant t the valid-prefix slot row of ITS lanes at the fixed
+width C — exactly what the single-tenant engine sees from
+``Dedup.process_padded(width=C)`` on the same groups with the same
+tenant-folded rng — so an interleaved mixed-tenant stream is verdict-
+bit-identical to T isolated single-tenant runs. Lanes beyond a tenant's
+per-step admission capacity are conservatively reported distinct and
+counted (``FleetResult.overflow``), the same lossless-or-counted contract
+as the sharded dispatch (§4.2).
+
+The sharded fleet (LPT rebalance of tenants across shards) is the elastic
+path itself: ``tenant_tagged_keys`` rides the tenant id in the key's top
+bits, so ``rebalance_buckets == n_tenants`` makes every router bucket one
+tenant's sub-filter — see ``dedup.sharded.ShardedDedup.run_tenant_stream``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import compat
+from .batched import TenantStepParams, make_templated_step
+from .config import DedupConfig
+from .state import FilterState, init_state
+
+
+class TenantParams(NamedTuple):
+    """Fleet-level per-tenant knobs — (T,) int32 rows of the value-like
+    config (DESIGN §4.6). ``max_value``/``threshold``/``window`` broadcast
+    into the vmapped step as ``TenantStepParams`` scalars; ``capacity`` is
+    consumed by the routing layer (per-step admission cap, <= the slot
+    width C). Validated against the fleet config by ``validate_params``."""
+    max_value: jnp.ndarray      # (T,) — sbf set-to-Max ceiling
+    threshold: jnp.ndarray      # (T,) — cms/hh verdict threshold
+    window: jnp.ndarray         # (T,) — swbf effective window (batches)
+    capacity: jnp.ndarray       # (T,) — per-step admission cap
+
+
+class FleetResult(NamedTuple):
+    """One mixed batch's verdicts, in arrival order. ``routed`` is False
+    for invalid lanes and for lanes beyond their tenant's per-step
+    capacity — those are conservatively reported distinct (dup=False) and
+    counted in ``overflow``, the §4.2 contract."""
+    dup: jnp.ndarray            # (B,) bool
+    routed: jnp.ndarray         # (B,) bool
+    overflow: jnp.ndarray       # () int32
+
+
+def default_tenant_params(cfg: DedupConfig, capacity: int) -> TenantParams:
+    """Every tenant at the fleet config's values — the homogeneous fleet."""
+    t = cfg.n_tenants
+    full = lambda v: jnp.full((t,), v, jnp.int32)  # noqa: E731
+    return TenantParams(max_value=full(cfg.sbf_max),
+                        threshold=full(cfg.count_threshold),
+                        window=full(max(cfg.window, 1)),
+                        capacity=full(capacity))
+
+
+def validate_params(cfg: DedupConfig, params: TenantParams, capacity: int
+                    ) -> TenantParams:
+    """Host-side checks of the per-tenant rows against the fleet's static
+    shapes (DESIGN §4.6): per-tenant Max must keep the static plane count d
+    (same bit_length as ``cfg.sbf_max``), per-tenant windows must fit the
+    fleet ring, thresholds must be reachable below cell saturation, and no
+    admission cap may exceed the slot width C."""
+    t = cfg.n_tenants
+    import numpy as np
+    for name, arr in params._asdict().items():
+        if tuple(np.shape(arr)) != (t,):
+            raise ValueError(
+                f"TenantParams.{name} must have shape ({t},) for "
+                f"n_tenants={t}; got {tuple(np.shape(arr))}")
+    mv = np.asarray(params.max_value)
+    if cfg.variant == "sbf":
+        want_d = cfg.sbf_max.bit_length()
+        if any(int(v) < 1 or int(v).bit_length() != want_d for v in mv):
+            raise ValueError(
+                f"per-tenant max_value must keep the fleet's plane count: "
+                f"every value needs bit_length {want_d} (like "
+                f"sbf_max={cfg.sbf_max}); got {mv.tolist()}")
+    wv = np.asarray(params.window)
+    if cfg.variant == "swbf" and ((wv < 1) | (wv > cfg.window)).any():
+        raise ValueError(
+            f"per-tenant window must lie in [1, {cfg.window}] — the fleet "
+            f"ring has cfg.window={cfg.window} slots; got {wv.tolist()}")
+    tv = np.asarray(params.threshold)
+    cap_cell = (1 << cfg.bits_per_cell) - 1
+    if ((tv < 1) | (tv > cap_cell)).any():
+        raise ValueError(
+            f"per-tenant threshold must lie in [1, {cap_cell}] (cells "
+            f"saturate at 2^d - 1); got {tv.tolist()}")
+    cv = np.asarray(params.capacity)
+    if ((cv < 1) | (cv > capacity)).any():
+        raise ValueError(
+            f"per-tenant capacity must lie in [1, {capacity}] — the fleet "
+            f"slot width C is {capacity}; got {cv.tolist()}")
+    return TenantParams(*(jnp.asarray(a, jnp.int32) for a in params))
+
+
+def init_fleet_state(cfg: DedupConfig, seed: int | None = None,
+                     event_capacity: int | None = None) -> FilterState:
+    """Stacked (T, ...) fleet state: one ``init_state`` template broadcast
+    over the tenant axis, each tenant's rng folded on its TENANT id — the
+    elastic path's bucket-id fold (§4.4), so tenant randomness streams are
+    independent and travel with the tenant."""
+    t = cfg.n_tenants
+    kw = {}
+    if cfg.variant == "swbf":
+        kw["event_capacity"] = event_capacity
+    base = init_state(cfg, seed, **kw)
+
+    def stack(x):
+        return jnp.broadcast_to(x[None], (t, *x.shape))
+
+    return FilterState(
+        bits=stack(base.bits),
+        position=jnp.ones((t,), jnp.int32),
+        load=stack(base.load),
+        rng=jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            base.rng, jnp.arange(t)),
+        ring=jax.tree.map(stack, base.ring),
+    )
+
+
+def tenant_rank(tenant: jnp.ndarray, valid: jnp.ndarray, n_tenants: int
+                ) -> jnp.ndarray:
+    """Arrival rank of each lane within its tenant — the number of earlier
+    valid lanes carrying the same tenant id. One value-free sort of the
+    (tenant-major, lane-minor) composite key plus two searchsorted gathers:
+    O(B log B) in the batch width, independent of T (the onehot-cumsum the
+    sharded dispatch uses is O(B·S) — fine for shard counts, wrong for
+    thousands of tenants). Invalid lanes park at the sentinel and get an
+    arbitrary (unused) rank."""
+    b = tenant.shape[0]
+    lb = max(1, (b - 1).bit_length())
+    if n_tenants >= (1 << (32 - lb)):
+        raise ValueError(
+            f"tenant_rank composite key overflow: n_tenants {n_tenants} "
+            f"needs more than {32 - lb} bits next to a batch of {b}")
+    lane = jnp.arange(b, dtype=jnp.uint32)
+    comp = (tenant.astype(jnp.uint32) << lb) | lane
+    comp = jnp.where(valid, comp, jnp.uint32(0xFFFFFFFF))
+    sc = jnp.sort(comp)
+    base = jnp.searchsorted(sc, tenant.astype(jnp.uint32) << lb,
+                            side="left")
+    mine = jnp.searchsorted(sc, comp, side="left")
+    return (mine - base).astype(jnp.int32)
+
+
+def tenant_tagged_keys(keys: jnp.ndarray, tenant: jnp.ndarray,
+                       n_tenants: int) -> jnp.ndarray:
+    """Fold the tenant id into the top log2(T) bits of the uint32 key — the
+    sharded fleet's routing encoding (DESIGN §4.6): ``range_bucket(tagged,
+    T)`` recovers exactly the tenant id (T is a power of two), so the
+    elastic path with ``rebalance_buckets == T`` range-routes by tenant,
+    rebalances tenants across shards with the §4.4 LPT monitor, and folds
+    each tenant sub-filter's rng on its bucket(=tenant) id. Injective while
+    caller keys use < 32 - log2(T) bits; wider keys alias within a tenant
+    (approximate-membership semantics, same as any key-space fold)."""
+    if n_tenants <= 1:
+        return keys.astype(jnp.uint32)
+    tb = (n_tenants - 1).bit_length()
+    mask = jnp.uint32((1 << (32 - tb)) - 1)
+    return ((tenant.astype(jnp.uint32) << (32 - tb))
+            | (keys.astype(jnp.uint32) & mask))
+
+
+class FleetDedup:
+    """The multi-tenant engine (DESIGN §4.6): same contract shape as
+    ``core.engine.Dedup``, plus a tenant lane per element. Jitted callables
+    are built once per distinct mixed-batch width and reused (the §3.5
+    compile-cache discipline); ``run_stream`` is one donated scan."""
+
+    def __init__(self, cfg: DedupConfig, capacity: int | None = None,
+                 params: Optional[TenantParams] = None):
+        cfg = cfg.validate()
+        self.cfg = cfg
+        self.n_tenants = cfg.n_tenants
+        if capacity is None:
+            # every-tenant-everywhere worst case is B, but Poisson traffic
+            # concentrates: default mirrors the sharded capacity_factor=2
+            # sizing per tenant, floor 8 (§4.2)
+            capacity = max(8, -(-2 * cfg.batch_size // self.n_tenants))
+        self.capacity = int(capacity)
+        params = (default_tenant_params(cfg, self.capacity)
+                  if params is None else params)
+        self.params = validate_params(cfg, params, self.capacity)
+        from .sketch import get_spec
+        if get_spec(cfg.variant).family == "counter" and not cfg.is_planes:
+            raise ValueError(
+                "tenant fleets run the counter family on the plane layout "
+                "only — the dense8 sbf branch is the single-filter "
+                "reference, not a template instance (DESIGN §4.6); use "
+                "layout='planes'")
+        if cfg.backend == "pallas":
+            from ..kernels.fused_template import make_fused_step
+            step = make_fused_step(cfg, params_aware=True)
+        else:
+            step = make_templated_step(cfg, params_aware=True)
+        # one launch for the whole (T, C) grid: vmap over the stacked state,
+        # the slot rows, and the per-tenant scalar params
+        self._vstep = jax.vmap(step)
+        self._fns: Dict[int, jax.stages.Wrapped] = {}
+        self._stream_fns: Dict[Tuple[int, int], jax.stages.Wrapped] = {}
+
+    # -------------------------------------------------------------- //
+    def init(self, seed: int | None = None) -> FilterState:
+        """Stacked (T, ...) state; the swbf ring is sized so one slot
+        absorbs one step's whole slot row (C elements)."""
+        return init_fleet_state(self.cfg, seed,
+                                event_capacity=self.capacity)
+
+    # -------------------------------------------------------------- //
+    def _fleet_fn(self):
+        t, cap = self.n_tenants, self.capacity
+        params = self.params
+        step_params = TenantStepParams(max_value=params.max_value,
+                                       threshold=params.threshold,
+                                       window=params.window)
+        vstep = self._vstep
+
+        def fleet_step(state: FilterState, keys: jnp.ndarray,
+                       tenant: jnp.ndarray, valid: jnp.ndarray):
+            rank = tenant_rank(tenant, valid, t)
+            keep = valid & (rank < params.capacity[tenant])
+            overflow = jnp.sum(valid & ~keep, dtype=jnp.int32)
+            tt = jnp.where(keep, tenant, t)              # drop overflow
+            rr = jnp.where(keep, rank, 0)
+            slot_keys = jnp.zeros((t, cap), jnp.uint32
+                                  ).at[tt, rr].set(keys, mode="drop")
+            slot_valid = jnp.zeros((t, cap), bool
+                                   ).at[tt, rr].set(True, mode="drop")
+            state, res = vstep(state, slot_keys, slot_valid, step_params)
+            dup = res.dup[tt.clip(0, t - 1), rr] & keep
+            return state, FleetResult(dup=dup, routed=keep,
+                                      overflow=overflow)
+
+        return fleet_step
+
+    def process(self, state: FilterState, keys: jnp.ndarray,
+                tenant: jnp.ndarray, valid: jnp.ndarray | None = None
+                ) -> Tuple[FilterState, FleetResult]:
+        """One mixed batch through the whole fleet — T logical filters, one
+        launch. ``tenant`` is (B,) int32 in [0, T)."""
+        keys = keys.astype(jnp.uint32)
+        tenant = tenant.astype(jnp.int32)
+        if valid is None:
+            valid = jnp.ones(keys.shape, bool)
+        b = keys.shape[0]
+        if b not in self._fns:
+            self._fns[b] = jax.jit(self._fleet_fn())
+        return self._fns[b](state, keys, tenant, valid)
+
+    # -------------------------------------------------------------- //
+    def run_stream(self, state: FilterState, keys: jnp.ndarray,
+                   tenant: jnp.ndarray
+                   ) -> Tuple[FilterState, jnp.ndarray, jnp.ndarray]:
+        """Whole (N,) mixed stream in ONE dispatch: pad the tail invalid,
+        scan the fleet step with the stacked state donated — the fleet
+        mirror of ``Dedup.run_stream`` (§3.5). Returns (state, dup (N,),
+        per-batch overflow (n_batches,))."""
+        b = self.cfg.batch_size
+        n = keys.shape[0]
+        n_pad = (-n) % b
+        kb = jnp.pad(keys.astype(jnp.uint32), (0, n_pad)).reshape(-1, b)
+        tb = jnp.pad(tenant.astype(jnp.int32), (0, n_pad)).reshape(-1, b)
+        vb = jnp.pad(jnp.ones((n,), bool), (0, n_pad)).reshape(-1, b)
+        key = (b, kb.shape[0])
+        if key not in self._stream_fns:
+            fleet_step = self._fleet_fn()
+
+            def stream(st, kb, tb, vb):
+                def body(st, xs):
+                    kk, tt, vv = xs
+                    st, res = fleet_step(st, kk, tt, vv)
+                    return st, (res.dup, res.overflow)
+
+                st, (dups, ovfs) = jax.lax.scan(body, st, (kb, tb, vb))
+                return st, dups, ovfs
+
+            self._stream_fns[key] = jax.jit(stream, donate_argnums=0)
+        state, dups, ovfs = self._stream_fns[key](state, kb, tb, vb)
+        return state, dups.reshape(-1)[:n], ovfs
+
+    # -------------------------------------------------------------- //
+    def process_cache_size(self) -> int:
+        """Compiled fleet-step specializations (one per mixed-batch width)
+        — the no-recompile regression hook (§3.5)."""
+        return sum(compat.jit_cache_size(fn) for fn in self._fns.values())
+
+    def stream_cache_size(self) -> int:
+        return sum(compat.jit_cache_size(fn)
+                   for fn in self._stream_fns.values())

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "pack_bits", "unpack_bits", "split_pos", "probe_packed",
@@ -381,12 +382,24 @@ def planes_saturating_add(planes: jnp.ndarray, addend: jnp.ndarray
     return jnp.stack([sp | carry for sp in sums])
 
 
-def planes_set_value(planes: jnp.ndarray, delta: jnp.ndarray, value: int
+def planes_set_value(planes: jnp.ndarray, delta: jnp.ndarray, value
                      ) -> jnp.ndarray:
     """Set every cell selected by the OR-union ``delta`` word to ``value``:
     plane p gets ``(A | delta)`` where value's bit p is 1, ``(A & ~delta)``
     where it is 0 — the same one-pass ``(A & ~D) | I`` form as the 1-bit
-    update (DESIGN.md §3.2/§3.6)."""
-    return jnp.stack(
-        [(planes[p] | delta) if (value >> p) & 1 else (planes[p] & ~delta)
-         for p in range(planes.shape[0])])
+    update (DESIGN.md §3.2/§3.6).
+
+    ``value`` may be a Python int (static — the per-plane branch folds at
+    trace time) or a traced int32 scalar (per-tenant ``Max`` broadcast,
+    DESIGN §4.6): ``(A & ~D) | (D & mask_p)`` with ``mask_p`` the all-ones
+    word iff value's bit p is set — identical words, data-dependent value."""
+    if isinstance(value, (int, np.integer)):
+        return jnp.stack(
+            [(planes[p] | delta) if (int(value) >> p) & 1
+             else (planes[p] & ~delta) for p in range(planes.shape[0])])
+    vdyn = jnp.asarray(value, jnp.uint32)
+    out = []
+    for p in range(planes.shape[0]):
+        mask_p = jnp.uint32(0) - ((vdyn >> p) & jnp.uint32(1))
+        out.append((planes[p] & ~delta) | (delta & mask_p))
+    return jnp.stack(out)

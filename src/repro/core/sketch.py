@@ -64,6 +64,8 @@ class SketchSpec:
     make_decide: Callable[[DedupConfig], Callable]
     draw: Optional[Callable]
     make_events: Optional[Callable[[DedupConfig], Callable]] = None
+    thresholded: bool = False    # decide takes a ``t=`` count threshold the
+                                 # fleet step overrides per tenant (§4.6)
 
 
 # ---------------- counter-family decision fns ---------------------------- //
@@ -84,19 +86,21 @@ def _decide_swbf(cfg: DedupConfig):
 
 
 def _decide_cms(cfg: DedupConfig):
-    t = cfg.count_threshold
+    t0 = cfg.count_threshold
 
-    def decide(vals, valid, seen):
+    def decide(vals, valid, seen, t=t0):
         # count-min estimate >= threshold — at t == 1 this degenerates to
-        # the counting-Bloom membership verdict (all k cells nonzero)
+        # the counting-Bloom membership verdict (all k cells nonzero).
+        # ``t`` defaults to the static config threshold; a fleet step passes
+        # the per-tenant traced scalar instead (DESIGN §4.6)
         return ((jnp.min(vals, axis=1) >= t) | seen) & valid
     return decide
 
 
 def _decide_hh(cfg: DedupConfig):
-    t = cfg.count_threshold
+    t0 = cfg.count_threshold
 
-    def decide(vals, valid, seen):
+    def decide(vals, valid, seen, t=t0):
         # heavy-hitter flag: long-run frequency only — an earlier equal key
         # in THIS batch says nothing about heaviness, so no ``seen`` join
         return (jnp.min(vals, axis=1) >= t) & valid
@@ -166,11 +170,13 @@ SKETCHES = {
     "cms": SketchSpec(name="cms", family="counter", probe="value",
                       uses_seen=True, windowed=False, combine="add",
                       has_sub=False, make_decide=_decide_cms,
-                      draw=None, make_events=_events_count),
+                      draw=None, make_events=_events_count,
+                      thresholded=True),
     "hh": SketchSpec(name="hh", family="counter", probe="value",
                      uses_seen=False, windowed=False, combine="add",
                      has_sub=False, make_decide=_decide_hh,
-                     draw=None, make_events=_events_count),
+                     draw=None, make_events=_events_count,
+                     thresholded=True),
 }
 
 

@@ -903,6 +903,34 @@ class ShardedDedup:
         state, dups, ovfs = stream(state, kb, vb)
         return state, dups.reshape(-1)[:n], ovfs
 
+    def run_tenant_stream(self, state: FilterState, keys: jnp.ndarray,
+                          tenant: jnp.ndarray
+                          ) -> Tuple[FilterState, jnp.ndarray, jnp.ndarray]:
+        """Sharded TENANT FLEET (DESIGN §4.6): the elastic path with one
+        router bucket per tenant. The tenant id rides the top log2(T) bits
+        of the tenant-tagged key (``core.fleet.tenant_tagged_keys``), so
+        ``range_bucket(tagged, T)`` IS the tenant id — every bucket is one
+        tenant's self-contained sub-filter (its own bits/position/load and
+        a bucket(=tenant)-folded rng), the load-triggered LPT monitor
+        (§4.4) rebalances TENANTS across shards wholesale, and verdicts are
+        bit-identical across mesh sizes because the per-bucket step width
+        is device-count-invariant. No new routing machinery: same scan,
+        same ppermute ring, same checkpoint format.
+
+        Requires ``rebalance_buckets == base.n_tenants`` (> 1) — that
+        equality is what makes bucket identity equal tenant identity."""
+        from ..core.fleet import tenant_tagged_keys
+        t = self.scfg.base.n_tenants
+        if t <= 1 or not self.scfg.elastic or self.scfg.n_buckets != t:
+            raise ValueError(
+                f"run_tenant_stream needs the elastic path with one bucket "
+                f"per tenant: set rebalance_buckets == n_tenants (> 1); got "
+                f"n_tenants={t}, rebalance_buckets={self.scfg.n_buckets} "
+                f"(DESIGN §4.6)")
+        tagged = tenant_tagged_keys(keys.astype(jnp.uint32),
+                                    jnp.asarray(tenant, jnp.int32), t)
+        return self.run_stream(state, tagged)
+
     def stream_cache_size(self) -> int:
         """Compiled specializations of the stream scan (one per distinct
         stream length) — the sharded no-recompile regression hook, mirroring

@@ -65,12 +65,21 @@ from .common import (DEFAULT_CHUNK_B, DEFAULT_TILE_W, check_vmem_budget,
 
 def make_fused_step(cfg, spec=None, *, tile_w: int = DEFAULT_TILE_W,
                     chunk_b: int = DEFAULT_CHUNK_B,
-                    interpret: bool | None = None):
+                    interpret: bool | None = None,
+                    params_aware: bool = False):
     """BatchedStep for ``cfg.backend == "pallas"`` — generated from the
     variant's ``SketchSpec`` (or an explicit ``spec``), same signature and
     bit-identical results as the jnp step from the same spec. ``chunk_b``
     applies to the bitset family only (the counter kernels consume
-    pre-reduced word deltas, not per-element scatters)."""
+    pre-reduced word deltas, not per-element scatters).
+
+    ``params_aware=True`` is the fleet form (DESIGN §4.6): the step takes a
+    trailing ``TenantStepParams`` whose traced scalars ride into the kernel
+    as two extra (1,)-operands — the cms/hh verdict threshold and the sbf
+    set-to-Max ceiling — replacing the static config values at exactly the
+    seams the jnp twin replaces them (``core.batched``), so the two
+    backends stay bit-identical per tenant under ``jax.vmap``. The swbf
+    window modulus stays outside the kernel with the ring push."""
     cfg = cfg.validate()
     if spec is None:
         from ..core.sketch import get_spec
@@ -81,9 +90,15 @@ def make_fused_step(cfg, spec=None, *, tile_w: int = DEFAULT_TILE_W,
                 f"the fused {cfg.variant} kernel needs the bit-plane layout "
                 f"(cfg.layout='planes'); got {cfg.effective_layout!r}")
         return _make_counter_kernel_step(cfg, spec, tile_w=tile_w,
-                                         chunk_b=chunk_b, interpret=interpret)
-    return _make_bitset_kernel_step(cfg, spec, tile_w=tile_w,
+                                         chunk_b=chunk_b, interpret=interpret,
+                                         params_aware=params_aware)
+    step = _make_bitset_kernel_step(cfg, spec, tile_w=tile_w,
                                     chunk_b=chunk_b, interpret=interpret)
+    if not params_aware:
+        return step
+    # bitset decisions have no value-like config knob — accept and ignore
+    # the params so the vmapped fleet signature stays uniform (§4.6)
+    return lambda state, keys, valid, tp: step(state, keys, valid)
 
 
 # ---------------- counter family (d-bit plane cells) --------------------- //
@@ -114,7 +129,8 @@ def _event_operands(events, heads, cmax, rows, w, chunk):
 
 
 def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
-                              interpret: bool | None):
+                              interpret: bool | None,
+                              params_aware: bool = False):
     s, w = cfg.s, cfg.s_words
     d, k = cfg.n_planes, cfg.k
     # set-to-Max writes the sketch's counter ceiling (sbf_max), which may sit
@@ -143,7 +159,10 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray):
+    thresholded = spec.thresholded
+
+    def step(state: FilterState, keys: jnp.ndarray, valid: jnp.ndarray,
+             tp=None):
         b = keys.shape[0]
         planes = sbf_planes_3d(state.bits)                       # (d, 1, W)
         tw = largest_tile(w, tile_w)
@@ -186,6 +205,10 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
         if uses_seen:
             operands.append(seen.astype(jnp.int32))
         operands.append(state.load)
+        if params_aware and thresholded:
+            operands.append(jnp.reshape(tp.threshold, (1,)).astype(jnp.int32))
+        if params_aware and set_mode:
+            operands.append(jnp.reshape(tp.max_value, (1,)).astype(jnp.int32))
 
         def kernel(*refs):
             it = iter(refs)
@@ -202,6 +225,8 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
             iw_ref, im_ref, valid_ref = next(it), next(it), next(it)
             seen_ref = next(it) if uses_seen else None
             load_ref = next(it)
+            thr_ref = next(it) if (params_aware and thresholded) else None
+            cmax_ref = next(it) if (params_aware and set_mode) else None
             out_ref, dup_ref, load_out_ref = next(it), next(it), next(it)
 
             iw_ = iw_ref[...]
@@ -227,7 +252,11 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
             vals = jnp.stack(cols, axis=1)
             # --- decide: shared spec logic (bit-identical to jnp path) ---- //
             seen_ = (seen_ref[...] != 0) if uses_seen else None
-            dup_ref[...] = decide(vals, valid_, seen_).astype(jnp.int32)
+            if thr_ref is not None:
+                dup = decide(vals, valid_, seen_, t=thr_ref[0])
+            else:
+                dup = decide(vals, valid_, seen_)
+            dup_ref[...] = dup.astype(jnp.int32)
 
             if accumulate:
                 sub_w_ = sub_w_ref[...] if has_sub else None
@@ -269,7 +298,8 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
                     else:
                         i = jax.lax.dynamic_slice(ins_ref[...], (base,),
                                                   (tw,))
-                    r = planes_set_value(r, i, cmax)
+                    cm = cmax_ref[0] if cmax_ref is not None else cmax
+                    r = planes_set_value(r, i, cm)
                 else:
                     if accumulate:
                         c = jnp.stack(accum_tile(ins_w_, ins_m_, d, lane))
@@ -305,7 +335,8 @@ def _make_counter_kernel_step(cfg, spec, *, tile_w: int, chunk_b: int,
         ring = state.ring
         if ev.ring_payload is not None:
             # the ring is engine state, not kernel state — jnp on purpose
-            ring = ring_push(ring, ev.ring_payload, cfg.window)
+            window = tp.window if params_aware else cfg.window
+            ring = ring_push(ring, ev.ring_payload, window)
         n_valid = valid.sum(dtype=jnp.int32)
         new = FilterState(bits, state.position + n_valid, new_load, rng, ring)
         return new, BatchResult(dup=dup_i != 0, inserted=valid)

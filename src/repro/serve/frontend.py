@@ -73,12 +73,35 @@ def verdict_digest(dups) -> str:
 
 
 def replay_schedule(cfg: DedupConfig,
-                    schedule: Sequence[Tuple[int, np.ndarray]],
+                    schedule: Sequence[tuple],
                     event_capacity: Optional[int] = None) -> str:
     """Synchronous replay of a recorded admitted schedule: a fresh engine,
     one plain (non-donating) ``process_padded`` per recorded batch at its
     recorded width. Returns the verdict digest — bit-identical to the
-    front-end's by the determinism contract (DESIGN.md §5.2)."""
+    front-end's by the determinism contract (DESIGN.md §5.2).
+
+    Tenant-fleet configs (``cfg.n_tenants > 1``, DESIGN §4.6) record
+    ``(width, keys, tenants)`` triples and replay through a fresh
+    ``FleetDedup`` at the same slot capacity the executor used (the widest
+    bucket = the max recorded width), so the per-tenant randomness and slot
+    routing reproduce exactly."""
+    if cfg.validate().n_tenants > 1:
+        import jax.numpy as jnp
+        from ..core.fleet import FleetDedup
+        cap = max((w for w, *_ in schedule), default=cfg.batch_size)
+        fleet = FleetDedup(cfg, capacity=cap)
+        st = fleet.init()
+        dups = []
+        for width, keys, tenants in schedule:
+            n = len(keys)
+            kp = np.zeros((width,), np.uint32)
+            tp = np.zeros((width,), np.int32)
+            vp = np.zeros((width,), bool)
+            kp[:n], tp[:n], vp[:n] = keys, tenants, True
+            st, res = fleet.process(st, jnp.asarray(kp), jnp.asarray(tp),
+                                    jnp.asarray(vp))
+            dups.append(np.asarray(res.dup)[:n])
+        return verdict_digest(dups)
     eng = Dedup(cfg)
     cap = event_capacity
     if cap is None and cfg.variant == "swbf" and schedule:
@@ -107,9 +130,20 @@ class MicroBatchExecutor:
         self.buckets = tuple(sorted(int(b) for b in buckets))
         if not self.buckets or self.buckets[0] < 1:
             raise ValueError(f"buckets must be positive: {buckets!r}")
-        self.engine = Dedup(dedup_cfg)
-        cap = self.buckets[-1] if self.cfg.variant == "swbf" else None
-        self.state = self.engine.init(event_capacity=cap)
+        self.n_tenants = self.cfg.n_tenants
+        if self.n_tenants > 1:
+            # tenant fleet (DESIGN §4.6): T isolated logical filters, one
+            # vmapped launch per micro-batch. Slot capacity = the widest
+            # bucket, so no admitted request ever overflows its tenant row.
+            from ..core.fleet import FleetDedup
+            self.engine = None
+            self.fleet = FleetDedup(dedup_cfg, capacity=self.buckets[-1])
+            self.state = self.fleet.init()
+        else:
+            self.fleet = None
+            self.engine = Dedup(dedup_cfg)
+            cap = self.buckets[-1] if self.cfg.variant == "swbf" else None
+            self.state = self.engine.init(event_capacity=cap)
         self.score_fn = score_fn
         self.cache = ResponseCache(cache_size, cache_policy)
         self.schedule: Optional[List[Tuple[int, np.ndarray]]] = \
@@ -131,17 +165,48 @@ class MicroBatchExecutor:
         raise ValueError(f"batch of {n} exceeds largest bucket "
                          f"{self.buckets[-1]}")
 
+    def cache_keys(self, keys: np.ndarray,
+                   tenants: Optional[np.ndarray]) -> np.ndarray:
+        """Response-cache identity of each request: the raw key for the
+        classic engine, the TENANT-TAGGED key (tenant id in the top log2(T)
+        bits — the sharded fleet's encoding, DESIGN §4.6) for a fleet, so
+        tenants never share cached responses."""
+        if self.n_tenants <= 1 or tenants is None:
+            return keys
+        tb = (self.n_tenants - 1).bit_length()
+        mask = np.uint32((1 << (32 - tb)) - 1)
+        return ((tenants.astype(np.uint32) << np.uint32(32 - tb))
+                | (keys & mask))
+
     # ------------------------------------------------------ device path //
-    def dedup_chunk(self, keys: np.ndarray) -> np.ndarray:
+    def dedup_chunk(self, keys: np.ndarray,
+                    tenants: Optional[np.ndarray] = None) -> np.ndarray:
         """One padded, donated engine step for one micro-batch (<= largest
-        bucket). Returns the (n,) host dup verdicts."""
+        bucket). Returns the (n,) host dup verdicts. A fleet executor
+        (``cfg.n_tenants > 1``) routes the batch by the (n,) ``tenants``
+        lane instead — T logical filters, still ONE launch (§4.6)."""
         n = keys.shape[0]
         width = self.bucket_for(n)
-        self.state, res = self.engine.process_padded(
-            self.state, keys, width=width, donate=True)
-        dup = np.asarray(res.dup)
-        if self.schedule is not None:
-            self.schedule.append((width, keys.copy()))
+        if self.fleet is not None:
+            import jax.numpy as jnp
+            if tenants is None:
+                tenants = np.zeros((n,), np.int32)
+            kp = np.zeros((width,), np.uint32)
+            tp = np.zeros((width,), np.int32)
+            vp = np.zeros((width,), bool)
+            kp[:n], tp[:n], vp[:n] = keys, tenants, True
+            self.state, res = self.fleet.process(
+                self.state, jnp.asarray(kp), jnp.asarray(tp),
+                jnp.asarray(vp))
+            dup = np.asarray(res.dup)[:n]
+            if self.schedule is not None:
+                self.schedule.append((width, keys.copy(), tenants.copy()))
+        else:
+            self.state, res = self.engine.process_padded(
+                self.state, keys, width=width, donate=True)
+            dup = np.asarray(res.dup)
+            if self.schedule is not None:
+                self.schedule.append((width, keys.copy()))
         self._digest.update(np.int64(dup.size).tobytes())
         self._digest.update(np.packbits(dup).tobytes())
         self.n_batches += 1
@@ -175,15 +240,20 @@ class MicroBatchExecutor:
     def run(self, batch: dict) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Full synchronous path over an arbitrary-length request batch:
         chunk to the largest bucket, then verdict+respond per chunk.
-        Returns (responses (B,) object, dup (B,) bool, hit (B,) bool)."""
+        Returns (responses (B,) object, dup (B,) bool, hit (B,) bool).
+        A fleet executor reads the per-request tenant ids from the
+        ``"tenant"`` field (default: every request on tenant 0)."""
         keys = np.asarray(batch["key"], np.uint32)
+        tenants = (np.asarray(batch["tenant"], np.int32)
+                   if "tenant" in batch else None)
         bmax = self.buckets[-1]
         vals, dups, hits = [], [], []
         for i in range(0, keys.shape[0], bmax):
             k = keys[i:i + bmax]
+            t = None if tenants is None else tenants[i:i + bmax]
             payload = {f: np.asarray(v)[i:i + bmax] for f, v in batch.items()}
-            dup = self.dedup_chunk(k)
-            v, hit = self.respond_chunk(k, payload)
+            dup = self.dedup_chunk(k, t)
+            v, hit = self.respond_chunk(self.cache_keys(k, t), payload)
             vals.append(v)
             dups.append(dup)
             hits.append(hit)
@@ -194,6 +264,12 @@ class MicroBatchExecutor:
     def digest(self) -> str:
         """Verdict digest of every batch executed so far (parity probe)."""
         return self._digest.hexdigest()
+
+    def process_cache_size(self) -> int:
+        """Compiled step specializations — one per bucket width, ever,
+        whichever engine (classic or fleet) sits underneath."""
+        return (self.fleet.process_cache_size() if self.fleet is not None
+                else self.engine.process_cache_size())
 
     @property
     def mean_fill(self) -> float:
@@ -236,8 +312,8 @@ class ServeFrontend:
         self.queue_limit = (max_live_batches * self._exec.buckets[-1]
                             if queue_limit is None else queue_limit)
         self.flush_timeout = flush_timeout
-        self._queue: Deque[Tuple[int, Optional[dict], asyncio.Future]] = \
-            deque()
+        self._queue: Deque[Tuple[int, int, Optional[dict],
+                                 asyncio.Future]] = deque()
         self._running = False
         self._in_flight = 0
         self.n_submitted = 0
@@ -269,17 +345,21 @@ class ServeFrontend:
         await self.stop()
 
     # ------------------------------------------------------------ ingest //
-    async def submit(self, key: int, payload: Optional[dict] = None
-                     ) -> ServeResult:
+    async def submit(self, key: int, payload: Optional[dict] = None,
+                     *, tenant: int = 0) -> ServeResult:
         """Enqueue one request; resolves when its micro-batch completes.
         Sheds IMMEDIATELY (``verdict="retry"``, no waiting) when the ingest
-        queue is at ``queue_limit`` — bounded latency, explicit overload."""
+        queue is at ``queue_limit`` — bounded latency, explicit overload.
+        ``tenant`` selects the request's logical filter on a fleet
+        front-end (``cfg.n_tenants > 1``, DESIGN §4.6); requests from
+        different tenants coalesce into the SAME micro-batch and are routed
+        on device."""
         self.n_submitted += 1
         if not self._running or len(self._queue) >= self.queue_limit:
             self.n_shed += 1
             return ServeResult(VERDICT_RETRY)
         fut = self._loop.create_future()
-        self._queue.append((int(key), payload, fut))
+        self._queue.append((int(key), int(tenant), payload, fut))
         self._arrived.set()
         return await fut
 
@@ -314,32 +394,37 @@ class ServeFrontend:
             take = min(len(self._queue), bmax)
             items = [self._queue.popleft() for _ in range(take)]
             keys = np.fromiter((it[0] for it in items), np.uint32, take)
+            tenants = np.fromiter((it[1] for it in items), np.int32, take)
             try:
                 # device path in a worker thread: the event loop keeps
                 # ingesting (and shedding) while the engine step runs
                 dup = await self._loop.run_in_executor(
-                    None, self._exec.dedup_chunk, keys)
+                    None, self._exec.dedup_chunk, keys, tenants)
             except Exception as e:          # fail the batch, keep serving
-                for _k, _p, fut in items:
+                for *_kt, fut in items:
                     if not fut.done():
                         fut.set_exception(e)
                 self._in_flight -= 1
                 self._live.release()
                 continue
             # post-processing overlaps the NEXT batch's ingest + dedup
-            t = self._loop.create_task(self._post(items, keys, dup))
+            t = self._loop.create_task(self._post(items, keys, tenants, dup))
             self._post_tasks.add(t)
             t.add_done_callback(self._post_tasks.discard)
 
-    async def _post(self, items, keys: np.ndarray, dup: np.ndarray) -> None:
+    async def _post(self, items, keys: np.ndarray, tenants: np.ndarray,
+                    dup: np.ndarray) -> None:
         try:
+            # cache identity is tenant-scoped on a fleet (§4.6): tenants
+            # never see each other's cached responses
+            ckeys = self._exec.cache_keys(keys, tenants)
             payload = None
-            if any(it[1] is not None for it in items):
-                fields = items[0][1].keys()
-                payload = {f: np.asarray([it[1][f] for it in items])
+            if any(it[2] is not None for it in items):
+                fields = items[0][2].keys()
+                payload = {f: np.asarray([it[2][f] for it in items])
                            for f in fields}
                 payload["key"] = keys
-            hit, vals = self._exec.cache.lookup(keys)
+            hit, vals = self._exec.cache.lookup(ckeys)
             need = np.flatnonzero(~hit)
             if need.size:
                 batch = {"key": keys} if payload is None else payload
@@ -348,17 +433,17 @@ class ServeFrontend:
                     None, self._exec.score_fn, sub))
                 for j, i in enumerate(need):
                     vals[i] = scores[j]
-                self._exec.cache.admit(keys[need], list(scores))
+                self._exec.cache.admit(ckeys[need], list(scores))
             self._exec.n_cached += int(hit.sum())
             self._exec.n_scored += int(need.size)
-            for i, (_k, _p, fut) in enumerate(items):
+            for i, (*_kt, fut) in enumerate(items):
                 if not fut.done():
                     fut.set_result(ServeResult(
                         VERDICT_OK, value=vals[i], dup=bool(dup[i]),
                         cached=bool(hit[i])))
             self.n_completed += len(items)
         except Exception as e:              # fail the batch, keep serving
-            for _k, _p, fut in items:
+            for *_kt, fut in items:
                 if not fut.done():
                     fut.set_exception(e)
         finally:
@@ -380,5 +465,5 @@ class ServeFrontend:
             "dup": ex.n_dup, "cached": ex.n_cached, "scored": ex.n_scored,
             "cache_hit_rate": ex.n_cached / max(1, ex.n_requests),
             "dup_rate": ex.n_dup / max(1, ex.n_requests),
-            "process_cache": ex.engine.process_cache_size(),
+            "process_cache": ex.process_cache_size(),
         }

@@ -296,6 +296,24 @@ def test_baseline_split_and_stale(tmp_path):
     assert report.to_dict()["ok"] is False
 
 
+def test_stale_baseline_fails_full_sweep_only():
+    """A stale suppression FAILS a full sweep (the justification now
+    misleads); a filtered sweep downgrades it to a warning, since a
+    narrowed sweep cannot tell stale from unswept (DESIGN §6)."""
+    import dataclasses
+    from repro.analysis.runner import LintReport
+    rep = LintReport(findings=[], suppressed=[],
+                     stale_baseline=["ghost-rule::nowhere"],
+                     n_entries=1, n_hlo_rules=1, n_source_rules=1,
+                     n_source_files=1, elapsed_s=0.0, partial=False)
+    assert rep.ok is False and rep.to_dict()["ok"] is False
+    text = render(rep)
+    assert "FAIL" in text and "stale baseline suppression" in text
+    filt = dataclasses.replace(rep, partial=True)
+    assert filt.ok is True
+    assert "WARNING" in render(filt)
+
+
 def test_baseline_requires_justification(tmp_path):
     base = tmp_path / "baseline.json"
     base.write_text(json.dumps({"suppressions": [{"key": "x::y"}]}))

@@ -30,6 +30,8 @@ def _run_subprocess(code: str, devices: int = 8) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_sharded_dedup_equals_single_filter():
     """8 simulated devices: the sharded run_stream (ONE dispatch for the
     whole 12-batch stream, donated state) matches the single aggregate
@@ -70,6 +72,8 @@ def test_sharded_dedup_equals_single_filter():
     assert r["stream_cache"] == 1
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_sharded_rsbf_positions_are_per_shard():
     """RSBF's reservoir probability s/i is per-shard under key partitioning:
     each shard's position counts only its own arrivals, and the sum of
@@ -102,6 +106,8 @@ def test_sharded_rsbf_positions_are_per_shard():
     assert r["spread"] < 0.2     # router balances the key space
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_compressed_psum_error_feedback():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np, json
@@ -267,6 +273,8 @@ def test_sharded_overflow_accumulates_into_metrics_devicewise():
     assert m._pending_ovf == []
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_pipelined_stream_matches_serial_bitwise():
     """§4.5: the pipelined scan changes schedule, not math. Three paths at
     4 devices on a zipf-skewed stream: static compacted counter (swbf —
@@ -312,6 +320,8 @@ def test_pipelined_stream_matches_serial_bitwise():
         assert pipelined == serial, (name, pipelined, serial)
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_pipelined_stream_donates_filter_planes():
     """§4.5: the double-buffered scan must not copy the filter planes.
     The sharded state is donated and buffer-aliased through the pipelined

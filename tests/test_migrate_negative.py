@@ -1,0 +1,117 @@
+"""Checkpoint refusal paths (DESIGN §4.6) — the messages are the contract.
+
+A stacked tenant-fleet checkpoint restored into the wrong shape would
+mis-slice every tenant's filter without any crash, so ``check_tenant_meta``
+/ ``load_meta`` must refuse LOUDLY and say exactly what is wrong. These
+tests pin the user-facing fragments of each refusal; reworking an error
+message is an API change and should fail here first.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.migrate import (check_tenant_meta, export_tenant,
+                                      import_tenant, layout_meta,
+                                      tenant_meta)
+from repro.core import DedupConfig
+from repro.core.fleet import FleetDedup
+from repro.core.state import init_state
+
+
+def _cfg(t=4):
+    return DedupConfig(variant="rlbsbf", memory_bits=2048, k=2,
+                       batch_size=8, n_tenants=t, seed=3).validate()
+
+
+# -------------------------------------------------- tenant meta refusals //
+def test_refuses_unrecognized_layout_tag():
+    with pytest.raises(ValueError,
+                       match=r"unrecognized tenant layout tag 'striped'"):
+        check_tenant_meta({"tenant_layout": "striped", "tenant_count": 4},
+                          _cfg(4))
+
+
+def test_refuses_tenant_count_mismatch():
+    meta = tenant_meta(_cfg(8))
+    with pytest.raises(ValueError,
+                       match=r"tenant-count mismatch: checkpoint holds 8 "
+                             r"tenant\(s\), the restoring config expects 4"):
+        check_tenant_meta(meta, _cfg(4))
+    # ... and the refusal names the explicit escape hatch
+    with pytest.raises(ValueError, match=r"export/import tenants explicitly"):
+        check_tenant_meta(meta, _cfg(4))
+
+
+def test_refuses_legacy_checkpoint_into_fleet_config():
+    # a pre-§4.6 checkpoint carries no tenant keys at all — that defaults
+    # to a single filter, which must NOT slip into a T=4 fleet
+    with pytest.raises(ValueError, match=r"tenant-count mismatch"):
+        check_tenant_meta({"step": 7}, _cfg(4))
+
+
+def test_refuses_stacked_tag_contradicting_count():
+    with pytest.raises(ValueError,
+                       match=r"tag 'stacked' contradicts tenant_count 1"):
+        check_tenant_meta({"tenant_layout": "stacked", "tenant_count": 1},
+                          _cfg(1))
+
+
+def test_accepts_matching_meta_after_json_roundtrip():
+    cfg = _cfg(4)
+    fleet = FleetDedup(cfg, capacity=8)
+    meta = json.loads(json.dumps(tenant_meta(cfg, fleet.params)))
+    check_tenant_meta(meta, cfg)           # no raise
+    assert meta["tenant_layout"] == "stacked"
+    assert meta["tenant_params"]["max_value"] == [cfg.sbf_max] * 4
+
+
+# ------------------------------------------------- truncated meta.json //
+def test_truncated_meta_json_refused_loudly(tmp_path):
+    cfg = _cfg(4)
+    fleet = FleetDedup(cfg, capacity=8)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, fleet.init(3),
+             extra_meta={**layout_meta(cfg), **tenant_meta(cfg)})
+    path = os.path.join(str(tmp_path), "step_0000000001", "meta.json")
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(raw[:len(raw) // 2])       # filesystem short-write
+    with pytest.raises(ValueError,
+                       match=r"meta\.json truncated or corrupt at"):
+        mgr.load_meta(1)
+
+
+# ------------------------------------------- export / import refusals //
+def test_export_import_refuse_out_of_range_tenant():
+    cfg = _cfg(4)
+    st = FleetDedup(cfg, capacity=8).init(3)
+    with pytest.raises(ValueError,
+                       match=r"tenant 4 out of range for a fleet of 4"):
+        export_tenant(st, 4)
+    sub = export_tenant(st, 0)
+    with pytest.raises(ValueError,
+                       match=r"tenant -1 out of range for a fleet of 4"):
+        import_tenant(st, -1, sub)
+
+
+def test_import_refuses_shape_mismatch():
+    st = FleetDedup(_cfg(4), capacity=8).init(3)
+    other = init_state(DedupConfig(variant="rlbsbf", memory_bits=4096, k=2,
+                                   batch_size=8, seed=3).validate(), 3)
+    with pytest.raises(ValueError,
+                       match=r"tenant state shape mismatch: .* same config "
+                             r"required"):
+        import_tenant(st, 0, other)
+
+
+def test_export_refuses_single_filter_state():
+    single = init_state(DedupConfig(variant="rlbsbf", memory_bits=2048, k=2,
+                                    batch_size=8, seed=3).validate(), 3)
+    with pytest.raises(ValueError,
+                       match=r"not a stacked tenant-fleet state"):
+        export_tenant(single, 0)

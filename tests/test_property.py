@@ -172,3 +172,118 @@ def test_cms_error_bounded_at_paper_scale_width(seed):
     est = np.asarray(eng.estimate(st_, jnp.arange(500, dtype=jnp.uint32)))
     assert (est >= true).all()
     assert float((est - true).mean()) < 1.0
+
+
+# --------------------------------------------------- tenant fleets (§4.6) //
+# One fleet + one single-filter engine, built once and reused across
+# examples (every hypothesis draw would otherwise pay a fresh jit trace).
+_TEN_T, _TEN_B = 4, 8
+_TEN_SEED = 5
+
+
+def _tenant_fleet():
+    import dataclasses
+    from repro.core import DedupConfig
+    from repro.core.engine import Dedup
+    from repro.core.fleet import FleetDedup
+    if not hasattr(_tenant_fleet, "_cache"):
+        cfg = DedupConfig(variant="rlbsbf", memory_bits=1024, k=2,
+                          batch_size=_TEN_B, n_tenants=_TEN_T,
+                          seed=_TEN_SEED).validate()
+        scfg = dataclasses.replace(cfg, n_tenants=1).validate()
+        _tenant_fleet._cache = (cfg, FleetDedup(cfg, capacity=_TEN_B),
+                                Dedup(scfg), scfg)
+    return _tenant_fleet._cache
+
+
+def _tenant_batches(keys, tens):
+    """Pad the drawn (keys, tenants) to whole (steps, B) batches; the pad
+    lanes are real traffic for tenant 0 (constant key), not masked."""
+    n = max(len(keys), len(tens), 1)
+    steps = -(-n // _TEN_B)
+    kb = np.zeros(steps * _TEN_B, np.uint32)
+    tb = np.zeros(steps * _TEN_B, np.int32)
+    kb[:len(keys)] = keys
+    tb[:len(tens)] = tens
+    return kb.reshape(steps, _TEN_B), tb.reshape(steps, _TEN_B)
+
+
+def _tenant_fleet_verdicts(kb, tb):
+    import jax
+    _cfg, fleet, _eng, _scfg = _tenant_fleet()
+    st = fleet.init(_TEN_SEED)
+    out = []
+    for i in range(kb.shape[0]):
+        st, res = fleet.process(st, jnp.asarray(kb[i]), jnp.asarray(tb[i]))
+        assert int(res.overflow) == 0      # capacity == B: nothing drops
+        out.append(np.asarray(res.dup))
+    return np.stack(out), st
+
+
+def _tenant_isolated_verdicts(kb, tb):
+    """T single-tenant engines, rng folded on the tenant id, EVERY global
+    step run at the fleet's slot width (the §4.6 reference semantics)."""
+    import jax
+    from repro.core.state import init_state
+    _cfg, _fleet, eng, scfg = _tenant_fleet()
+    out = [np.zeros(_TEN_B, bool) for _ in range(kb.shape[0])]
+    for t in range(_TEN_T):
+        st = init_state(scfg, _TEN_SEED)
+        st = st._replace(rng=jax.random.fold_in(st.rng, t))
+        for i in range(kb.shape[0]):
+            sel = tb[i] == t
+            st, res = eng.process_padded(st, kb[i][sel], width=_TEN_B)
+            out[i][sel] = np.asarray(res.dup)
+    return np.stack(out)
+
+
+def _assert_interleaving_matches_isolated(keys, tens):
+    kb, tb = _tenant_batches(keys, tens)
+    got, _ = _tenant_fleet_verdicts(kb, tb)
+    want = _tenant_isolated_verdicts(kb, tb)
+    np.testing.assert_array_equal(got, want)
+
+
+def _assert_tenant_traffic_independence(keys, tens, focus, salt):
+    """Tenant ``focus``'s verdicts must not move when every OTHER tenant's
+    keys are rewritten (rng folded per tenant id — no shared randomness
+    stream, no shared filter rows)."""
+    import jax
+    kb, tb = _tenant_batches(keys, tens)
+    got, st = _tenant_fleet_verdicts(kb, tb)
+    kb2 = kb.copy()
+    other = tb != focus
+    # rewrite into a disjoint key range so the perturbation is real
+    kb2[other] = 1000 + ((kb2[other] * 31 + salt) % 97)
+    got2, st2 = _tenant_fleet_verdicts(kb2, tb)
+    sel = tb == focus
+    np.testing.assert_array_equal(got[sel], got2[sel])
+    # ... and the focus tenant's state row is bit-identical too
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(st2)):
+        if a.dtype == jnp.uint32 and a.ndim >= 1 and \
+                a.shape[0] == _TEN_T:
+            np.testing.assert_array_equal(np.asarray(a[focus]),
+                                          np.asarray(b[focus]))
+
+
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=48),
+       st.lists(st.integers(0, _TEN_T - 1), min_size=1, max_size=48))
+@settings(max_examples=25, deadline=None)
+def test_tenant_interleaving_matches_isolated(keys, tens):
+    """§4.6 isolation theorem, property form: ANY interleaved mixed-tenant
+    stream through one fleet launch is verdict-identical to T isolated
+    engines each fed only its own lanes (keys drawn from a 16-wide space
+    so intra-tenant repeats are dense)."""
+    _assert_interleaving_matches_isolated(keys, tens)
+
+
+@given(st.lists(st.integers(0, 15), min_size=4, max_size=48),
+       st.lists(st.integers(0, _TEN_T - 1), min_size=4, max_size=48),
+       st.integers(0, _TEN_T - 1), st.integers(0, 96))
+@settings(max_examples=25, deadline=None)
+def test_tenant_traffic_independence(keys, tens, focus, salt):
+    """Per-tenant rng fold independence, property form: rewriting every
+    other tenant's traffic (arbitrary focus tenant, arbitrary rewrite)
+    leaves the focus tenant's verdicts AND state row bit-identical."""
+    _assert_tenant_traffic_independence(keys, tens, focus, salt)

@@ -247,6 +247,8 @@ _PARITY_WORKER = """
 """
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_rebalance_fires_reduces_skew_and_preserves_verdicts():
     """8 simulated devices, range-skewed zipf stream: the monitor fires,
     the final max/mean per-shard load ratio improves on rebalance-off, every
@@ -311,6 +313,8 @@ _CKPT_WORKER = """
 """
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_rebalance_checkpoint_midstream_roundtrip():
     """Save mid-stream AFTER a rebalance fired, reload against a fresh
     init() template, and resume — bit-exact router table, permuted planes
